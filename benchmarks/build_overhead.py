@@ -1,0 +1,35 @@
+"""Paper Table 5: pre-processing (index build) time breakdown."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import PageANNIndex
+
+
+def run() -> list[str]:
+    x, _, _ = common.dataset()
+    cfg = common.base_cfg()
+    t0 = time.perf_counter()
+    idx = PageANNIndex.build(x[:4000], cfg)   # fresh build incl. Vamana
+    total = time.perf_counter() - t0
+    s = idx.stats
+    return [
+        f"build_total,{1e6 * total:.0f},n=4000;pages={s.pages};cap={s.capacity}",
+        f"build_vamana,{1e6 * s.vamana_s:.0f},share={100 * s.vamana_s / total:.0f}%",
+        f"build_grouping,{1e6 * s.grouping_s:.0f},share={100 * s.grouping_s / total:.0f}%",
+        f"build_pq,{1e6 * s.pq_s:.0f},share={100 * s.pq_s / total:.0f}%",
+        f"build_pack,{1e6 * s.pack_s:.0f},share={100 * s.pack_s / total:.0f}%",
+        f"build_lsh,{1e6 * s.lsh_s:.0f},share={100 * s.lsh_s / total:.0f}%",
+    ]
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

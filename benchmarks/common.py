@@ -1,0 +1,99 @@
+"""Shared benchmark setup: datasets, index builds (cached), timing."""
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MemoryMode, PageANNConfig, PageANNIndex, recall_at_k
+from repro.core import baselines as bl
+from repro.core import pq as pq_mod
+from repro.core.vamana import brute_force_knn, build_vamana
+from repro.data.pipeline import clustered_vectors, query_vectors
+
+CACHE = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_cache")
+N, D, Q = 8000, 32, 64
+
+
+def dataset():
+    x = clustered_vectors(N, D, num_clusters=64, seed=0)
+    q = query_vectors(x, Q, seed=1)
+    truth = brute_force_knn(x, q, 10)
+    return x, q, truth
+
+
+def _cache_path(tag: str) -> str:
+    os.makedirs(CACHE, exist_ok=True)
+    return os.path.join(CACHE, tag + ".pkl")
+
+
+def cached(tag: str, build_fn):
+    path = _cache_path(tag)
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    obj = build_fn()
+    with open(path, "wb") as f:
+        pickle.dump(obj, f)
+    return obj
+
+
+def base_cfg(**kw) -> PageANNConfig:
+    base = dict(
+        dim=D, graph_degree=24, build_beam=48, pq_subspaces=8,
+        lsh_sample=1024, lsh_entries=12, beam_width=64, max_hops=64,
+        memory_mode=MemoryMode.HYBRID,
+    )
+    base.update(kw)
+    return PageANNConfig(**base)
+
+
+def vamana_graph(x):
+    """Shared Vamana graph (built once, pickled)."""
+    def build():
+        return build_vamana(x, degree=24, beam=48, seed=0)
+
+    return cached(f"vamana_{len(x)}_{x.shape[1]}", build)
+
+
+def pageann_index(x, cfg: PageANNConfig, tag: str) -> PageANNIndex:
+    # PageANNIndex holds jnp arrays; rebuild each run but reuse the graph
+    # via monkeypatched build below (vamana dominates build time).
+    import repro.core.index as index_mod
+    import repro.core.vamana as vam
+
+    nbrs = vamana_graph(x)
+    orig = vam.build_vamana
+    vam.build_vamana = lambda *a, **k: nbrs
+    try:
+        idx = PageANNIndex.build(x, cfg)
+    finally:
+        vam.build_vamana = orig
+    return idx
+
+
+def baseline_data(x):
+    nbrs = vamana_graph(x)
+    books = cached(
+        "pq_books", lambda: np.asarray(pq_mod.train_pq(x, 8, 256, 10))
+    )
+    return nbrs, books
+
+
+def timeit(fn, *args, repeats=3):
+    import jax
+
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

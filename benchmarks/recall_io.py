@@ -1,0 +1,102 @@
+"""Paper Figs. 7/8 + Table 3: latency / throughput / mean I/Os vs recall@10.
+
+Sweeps the search beam for PageANN and both baselines; reports the full
+curve plus the Table-3-style comparison at recall >= 0.9. Wall-clock QPS on
+this CPU container is a *relative* proxy (all three run the same JAX/XLA
+substrate); the architecture-level metric is mean I/Os per query.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import recall_at_k
+from repro.core import baselines as bl
+
+
+def _curve_pageann(x, q, truth):
+    out = []
+    for beam, entries in ((16, 4), (32, 8), (64, 12), (96, 16), (128, 24)):
+        cfg = common.base_cfg(beam_width=beam, lsh_entries=entries)
+        idx = common.pageann_index(x, cfg, f"rc_{beam}")
+        res, dt = common.timeit(lambda: idx.search(q, k=10))
+        out.append(
+            dict(system="pageann", beam=beam,
+                 recall=recall_at_k(res.ids, truth),
+                 ios=float(res.ios.mean()), qps=len(q) / dt,
+                 ms=1000 * dt / len(q))
+        )
+    return out
+
+
+def _curve_baseline(x, q, truth, style):
+    nbrs, books = common.baseline_data(x)
+    if style == "starling":
+        from repro.core.page_graph import group_pages
+
+        cap = common.base_cfg().resolve_capacity()
+        g = group_pages(x, nbrs, capacity=cap, h=2)
+        data = bl.make_baseline_data(x, nbrs, books, page_of=g.page_of)
+        fn = bl.starling_search
+    else:
+        data = bl.make_baseline_data(x, nbrs, books)
+        fn = bl.diskann_search
+    out = []
+    qj = jnp.asarray(q)
+    for beam in (16, 32, 64, 96, 128):
+        res, dt = common.timeit(
+            lambda: fn(qj, data, beam=beam, k=10, max_hops=64)
+        )
+        out.append(
+            dict(system=style, beam=beam,
+                 recall=recall_at_k(np.asarray(res.ids), truth),
+                 ios=float(np.asarray(res.ios).mean()), qps=len(q) / dt,
+                 ms=1000 * dt / len(q))
+        )
+    return out
+
+
+def _at_recall(curve, target=0.9):
+    ok = [c for c in curve if c["recall"] >= target]
+    return min(ok, key=lambda c: c["ios"]) if ok else None
+
+
+def run() -> list[str]:
+    x, q, truth = common.dataset()
+    curves = (
+        _curve_pageann(x, q, truth)
+        + _curve_baseline(x, q, truth, "diskann")
+        + _curve_baseline(x, q, truth, "starling")
+    )
+    rows = []
+    for c in curves:
+        rows.append(
+            f"recall_io_{c['system']}_beam{c['beam']},{1e6 * c['ms'] / 1000:.1f},"
+            f"recall={c['recall']:.3f};ios={c['ios']:.1f};qps={c['qps']:.0f}"
+        )
+    # Table 3 analog at recall@10 >= 0.9
+    best = {
+        s: _at_recall([c for c in curves if c["system"] == s])
+        for s in ("pageann", "diskann", "starling")
+    }
+    if all(best.values()):
+        p, d, s = best["pageann"], best["diskann"], best["starling"]
+        second = min(d, s, key=lambda c: c["ios"])
+        rows.append(
+            f"table3_at_r90,0.0,pageann_ios={p['ios']:.1f};second_best_ios={second['ios']:.1f};"
+            f"io_reduction={100 * (1 - p['ios'] / second['ios']):.1f}%;"
+            f"pageann_qps={p['qps']:.0f};diskann_qps={d['qps']:.0f};starling_qps={s['qps']:.0f}"
+        )
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

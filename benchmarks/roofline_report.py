@@ -1,0 +1,79 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline markdown table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir="experiments/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_sec(s):
+    if s is None:
+        return "-"
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}us"
+
+
+def table(recs, mesh="pod16x16") -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "useful/HLO flops | peak GiB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skip":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped |  "
+                f"{r['skip_reason']} | — | — |"
+            )
+            continue
+        if r.get("status") != "ok" or "compute_s" not in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        ufr = r.get("useful_flops_ratio")
+        rows.append(
+            "| {a} | {s} | {c} | {m} | {x} | {b} | {u} | {p} | {f} |".format(
+                a=r["arch"], s=r["shape"],
+                c=fmt_sec(r.get("compute_s")), m=fmt_sec(r.get("memory_s")),
+                x=fmt_sec(r.get("collective_s")), b=r.get("bottleneck", "?"),
+                u=f"{ufr:.2f}" if ufr else "-",
+                p=r.get("peak_gib_per_device", "-"),
+                f="yes" if r.get("fits_hbm") else "NO",
+            )
+        )
+    return "\n".join(rows)
+
+
+def summary(recs) -> dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if r.get("status") == "skip"]
+    err = [r for r in recs if r.get("status") not in ("ok", "skip")]
+    return {"ok": len(ok), "skip": len(skip), "error": len(err)}
+
+
+def main():
+    recs = load()
+    print(table(recs))
+    print()
+    print("multi-pod compile proof:")
+    mp = [r for r in recs if r.get("mesh") == "pod2x16x16"]
+    print(f"  ok={sum(1 for r in mp if r['status'] == 'ok')} "
+          f"skip={sum(1 for r in mp if r['status'] == 'skip')} "
+          f"err={sum(1 for r in mp if r['status'] not in ('ok', 'skip'))}")
+    print("totals:", summary(recs))
+
+
+if __name__ == "__main__":
+    main()

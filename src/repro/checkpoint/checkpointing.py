@@ -1,0 +1,155 @@
+"""Checkpointing: sharded save/restore with atomic commit, an async writer
+thread, and elastic restore (re-shard onto a different mesh).
+
+Layout on disk:
+  <dir>/step_<N>.tmp/   leaf files while writing
+  <dir>/step_<N>/       renamed atomically on commit
+    MANIFEST.json       {step, leaf paths, shapes, dtypes}
+    <leaf>.npy          one file per pytree leaf (full array; on a real
+                        multi-host cluster each host writes its shard files
+                        — the manifest format already carries the pieces)
+
+Restore accepts target shardings, so a checkpoint written on one mesh can
+be loaded onto another (elastic scaling / failure-shrunk mesh): leaves are
+device_put with the *new* sharding, letting the runtime lay them out.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            key = getattr(p, "key", None)
+            if key is None:
+                key = getattr(p, "idx", None)
+            if key is None:
+                key = getattr(p, "name", "x")
+            parts.append(str(key))
+        names.append(_SEP.join(parts))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    names, leaves, _ = _flatten_with_names(tree)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", "_") + ".npy"
+        logical_dtype = str(arr.dtype)
+        if arr.dtype == "bfloat16":  # numpy can't natively (de)serialize bf16
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fname, "shape": list(arr.shape),
+             "dtype": logical_dtype}
+        )
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                steps.append(int(d.split("_")[1]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree, shardings=None):
+    """Restore into the structure of ``target_tree``. ``shardings`` (same
+    structure, or None) re-shards elastically onto the current mesh."""
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(final, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    names, leaves, treedef = _flatten_with_names(target_tree)
+    if shardings is not None:
+        _, shard_leaves, _ = _flatten_with_names(shardings)
+    else:
+        shard_leaves = [None] * len(leaves)
+    out = []
+    for name, leaf, shd in zip(names, leaves, shard_leaves):
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf '{name}'")
+        entry = by_name[name]
+        arr = np.load(os.path.join(final, entry["file"]))
+        if entry["dtype"] == "bfloat16" and arr.dtype == np.uint16:
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{name}: ckpt {arr.shape} vs target {want}")
+        dtype = getattr(leaf, "dtype", arr.dtype)
+        arr = arr.astype(dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None else jax.device_put(arr))
+    return treedef.unflatten(out)
+
+
+class AsyncCheckpointer:
+    """Background writer: ``submit`` snapshots to host memory immediately
+    (so training can mutate buffers) and a daemon thread serializes."""
+
+    def __init__(self, ckpt_dir: str, max_queue: int = 2):
+        self.ckpt_dir = ckpt_dir
+        self._q: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._err: Exception | None = None
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree = item
+            try:
+                save(self.ckpt_dir, step, host_tree)
+            except Exception as e:  # surfaced on next submit/close
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree):
+        if self._err:
+            raise self._err
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host_tree))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._t.join()

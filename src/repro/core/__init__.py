@@ -1,0 +1,5 @@
+"""PageANN core: the paper's contribution as composable JAX modules."""
+from repro.core.config import MemoryMode, PageANNConfig
+from repro.core.index import PageANNIndex, recall_at_k
+
+__all__ = ["MemoryMode", "PageANNConfig", "PageANNIndex", "recall_at_k"]

@@ -1,0 +1,217 @@
+"""Baselines the paper compares against, re-implemented in JAX.
+
+* ``diskann_search`` — DiskANN-style traversal: a vector-granularity Vamana
+  beam search where next hops are chosen with in-memory PQ estimates and every
+  expanded node costs one disk read of its (vector + adjacency) record. With
+  id-ordered placement multiple unrelated vectors share an SSD page, so each
+  node read drags a full page: the read-amplification regime of Table 1.
+
+* ``starling_search`` — Starling-style variant: identical traversal but the
+  disk layout packs *similar* vectors per page (we reuse PageANN's grouping)
+  and a page, once read, contributes all its members to reranking, so repeat
+  visits to co-located vectors are free (unique-page accounting).
+
+Both count "Mean I/Os" the same way the paper's Table 3 does, which makes
+them directly comparable with ``core.search`` on the same data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq as pq_mod
+
+PAD = -1
+INF = jnp.inf
+
+
+class BaselineData(NamedTuple):
+    x: jnp.ndarray           # (N, d) full vectors ('on disk')
+    nbrs: jnp.ndarray        # (N, R) vamana adjacency ('on disk' with vector)
+    codes: jnp.ndarray       # (N, M) PQ codes (in memory — DiskANN keeps these)
+    codebooks: jnp.ndarray   # (M, ksub, dsub)
+    page_of: jnp.ndarray     # (N,) page id of each vector under the layout
+    entry: jnp.ndarray       # () medoid id
+
+
+class BaselineResult(NamedTuple):
+    ids: jnp.ndarray
+    dists: jnp.ndarray
+    ios: jnp.ndarray       # page reads
+    hops: jnp.ndarray
+
+
+def _beam_search_one(
+    q, data: BaselineData, *, beam, k, max_hops, io_batch, unique_pages: bool
+):
+    n, r = data.nbrs.shape
+    num_pages = jnp.max(data.page_of) + 1
+
+    lut = pq_mod.pq_lut(q, data.codebooks)
+
+    cand_ids = jnp.full((beam,), PAD, jnp.int32).at[0].set(data.entry)
+    cand_d = jnp.full((beam,), INF, jnp.float32).at[0].set(
+        pq_mod.adc_distance(data.codes[data.entry][None], lut)[0]
+    )
+    cand_vis = jnp.zeros((beam,), bool)
+    node_vis = jnp.zeros((n,), bool)
+    # visited-page bitmap: only consulted when unique_pages (Starling layout)
+    page_vis = jnp.zeros((data.page_of.shape[0],), bool)  # sized N >= P
+    res_ids = jnp.full((k,), PAD, jnp.int32)
+    res_d = jnp.full((k,), INF, jnp.float32)
+    io = jnp.int32(0)
+    hops = jnp.int32(0)
+
+    def cond(s):
+        cand_ids, cand_d, cand_vis, node_vis, page_vis, res_ids, res_d, io, hops = s
+        live = (~cand_vis) & (cand_ids != PAD) & jnp.isfinite(cand_d)
+        return live.any() & (hops < max_hops)
+
+    def body(s):
+        cand_ids, cand_d, cand_vis, node_vis, page_vis, res_ids, res_d, io, hops = s
+
+        batch = jnp.full((io_batch,), PAD, jnp.int32)
+
+        def pick(j, carry):
+            cand_vis, node_vis, batch = carry
+            masked = jnp.where(cand_vis | (cand_ids == PAD), INF, cand_d)
+            slot = jnp.argmin(masked)
+            ok = jnp.isfinite(masked[slot])
+            cand_vis = cand_vis.at[slot].set(True)
+            v = jnp.where(ok, cand_ids[slot], PAD)
+            node_vis = jnp.where(
+                ok, node_vis.at[jnp.maximum(v, 0)].set(True), node_vis
+            )
+            return cand_vis, node_vis, batch.at[j].set(v)
+
+        cand_vis, node_vis, batch = jax.lax.fori_loop(
+            0, io_batch, pick, (cand_vis, node_vis, batch)
+        )
+        ok = batch >= 0
+        safe = jnp.maximum(batch, 0)
+
+        # --- the disk read: vector + adjacency record of each expanded node
+        pages = data.page_of[safe]
+        if unique_pages:
+            fresh = ok & ~page_vis[pages]
+            # two batch entries may share a page: count once
+            first = jnp.zeros_like(fresh)
+            seen = jnp.full((io_batch,), PAD, jnp.int32)
+
+            def dedup(j, carry):
+                first, seen = carry
+                dup = (seen == pages[j]).any()
+                first = first.at[j].set(fresh[j] & ~dup)
+                seen = seen.at[j].set(jnp.where(ok[j], pages[j], PAD))
+                return first, seen
+
+            first, _ = jax.lax.fori_loop(0, io_batch, dedup, (first, seen))
+            io2 = io + first.sum().astype(jnp.int32)
+            page_vis = page_vis.at[jnp.where(ok, pages, 0)].set(
+                page_vis[jnp.where(ok, pages, 0)] | ok
+            )
+        else:
+            io2 = io + ok.sum().astype(jnp.int32)  # one page read per node
+
+        vec = data.x[safe]                      # (b, d)
+        adj = data.nbrs[safe]                   # (b, R)
+
+        # exact rerank of the expanded nodes
+        ex = jnp.sum((vec - q[None, :]) ** 2, axis=-1)
+        ex = jnp.where(ok, ex, INF)
+        all_rd = jnp.concatenate([res_d, ex])
+        all_ri = jnp.concatenate([res_ids, batch])
+        order = jnp.argsort(all_rd)[:k]
+        res_d2, res_ids2 = all_rd[order], all_ri[order]
+
+        # estimated distances of neighbors via in-memory PQ
+        flat = adj.reshape(-1)
+        validn = (flat != PAD) & ok.repeat(r)
+        est = pq_mod.adc_distance(data.codes[jnp.maximum(flat, 0)], lut)
+        est = jnp.where(validn, est, INF)
+        est = jnp.where(node_vis[jnp.maximum(flat, 0)], INF, est)
+        dup = (flat[:, None] == cand_ids[None, :]).any(1)
+        est = jnp.where(dup, INF, est)
+        o = jnp.argsort(flat)
+        sflat = flat[o]
+        dupm = jnp.concatenate([jnp.array([False]), sflat[1:] == sflat[:-1]])
+        dup2 = jnp.zeros_like(dupm).at[o].set(dupm)
+        est = jnp.where(dup2 & (flat != PAD), INF, est)
+
+        all_ci = jnp.concatenate([cand_ids, flat])
+        all_cd = jnp.concatenate([cand_d, est])
+        all_cv = jnp.concatenate([cand_vis, jnp.zeros_like(validn)])
+        order = jnp.argsort(all_cd)[:beam]
+        return (
+            all_ci[order], all_cd[order], all_cv[order],
+            node_vis, page_vis, res_ids2, res_d2, io2, hops + 1,
+        )
+
+    s = (cand_ids, cand_d, cand_vis, node_vis, page_vis, res_ids, res_d, io, hops)
+    s = jax.lax.while_loop(cond, body, s)
+    return s[5], s[6], s[7], s[8]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beam", "k", "max_hops", "io_batch", "unique_pages"),
+)
+def baseline_search(
+    queries, data: BaselineData, *, beam, k, max_hops, io_batch, unique_pages
+) -> BaselineResult:
+    fn = functools.partial(
+        _beam_search_one,
+        data=data,
+        beam=beam,
+        k=k,
+        max_hops=max_hops,
+        io_batch=io_batch,
+        unique_pages=unique_pages,
+    )
+    ids, dists, ios, hops = jax.vmap(fn)(queries)
+    return BaselineResult(ids=ids, dists=dists, ios=ios, hops=hops)
+
+
+def make_baseline_data(
+    x: np.ndarray,
+    nbrs: np.ndarray,
+    codebooks: np.ndarray,
+    page_of: np.ndarray | None = None,
+    vectors_per_page: int | None = None,
+) -> BaselineData:
+    """id-order layout when page_of is None (DiskANN); else custom layout."""
+    from repro.core.vamana import medoid
+
+    x = np.asarray(x, np.float32)
+    codes = np.asarray(
+        pq_mod.pq_encode(jnp.asarray(x), jnp.asarray(codebooks))
+    )
+    if page_of is None:
+        vpp = vectors_per_page or max(1, 4096 // (x.shape[1] * 4))
+        page_of = np.arange(len(x)) // vpp
+    return BaselineData(
+        x=jnp.asarray(x),
+        nbrs=jnp.asarray(nbrs),
+        codes=jnp.asarray(codes),
+        codebooks=jnp.asarray(codebooks),
+        page_of=jnp.asarray(page_of.astype(np.int32)),
+        entry=jnp.asarray(medoid(x), jnp.int32),
+    )
+
+
+def diskann_search(queries, data: BaselineData, *, beam=64, k=10, max_hops=64, io_batch=5):
+    return baseline_search(
+        queries, data, beam=beam, k=k, max_hops=max_hops,
+        io_batch=io_batch, unique_pages=False,
+    )
+
+
+def starling_search(queries, data: BaselineData, *, beam=64, k=10, max_hops=64, io_batch=5):
+    return baseline_search(
+        queries, data, beam=beam, k=k, max_hops=max_hops,
+        io_batch=io_batch, unique_pages=True,
+    )

@@ -1,0 +1,104 @@
+"""Configuration for the PageANN index.
+
+Mirrors the knobs in the paper (Secs. 4.1-4.4, 6.1):
+  - Vamana build: degree R, build beam L_build, alpha.
+  - Page-node graph: page capacity n, hop parameter h, page degree R_p.
+  - PQ compression: M subspaces x 256 centroids (8-bit codes).
+  - LSH routing: B hyperplane bits, S sampled vectors, top-T entries.
+  - Search: beam L, I/O batch b (paper fixes b=5), result k.
+  - Memory-disk coordination mode (Sec 4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class MemoryMode(enum.Enum):
+    """Memory-disk coordination regimes from Sec 4.3.
+
+    DISK_ONLY: compressed neighbor vectors live on the SSD page next to the
+        page node (severely constrained memory; paper's ~0% memory ratio).
+    HYBRID:    a slice of compressed vectors is cached in host memory, the
+        remainder stays on-page (moderate budgets).
+    MEM_ALL:   all compressed vectors live in memory; the freed page bytes are
+        reallocated to raise the page capacity (sufficient memory).
+    """
+
+    DISK_ONLY = "disk_only"
+    HYBRID = "hybrid"
+    MEM_ALL = "mem_all"
+
+
+@dataclasses.dataclass(frozen=True)
+class PageANNConfig:
+    dim: int
+    # --- Vamana vector-graph build (Sec 4.1 starts from a Vamana graph) ---
+    graph_degree: int = 32          # R
+    build_beam: int = 64            # candidate pool size during construction
+    alpha: float = 1.2              # robust-prune slack
+    build_rounds: int = 2           # 1st round alpha=1.0, 2nd round alpha
+    # --- page-node graph (Alg. 1) ---
+    page_bytes: int = 4096          # S_page: SSD page size the layout targets
+    page_capacity: int | None = None  # n; derived from page_bytes when None
+    hop_h: int = 2                  # h: candidate-selection hop radius
+    page_degree: int = 48           # R_p: max external neighbors kept per page
+    # --- PQ compression ---
+    pq_subspaces: int = 16          # M
+    pq_ksub: int = 256              # centroids per subspace (8-bit codes)
+    pq_iters: int = 12              # k-means Lloyd iterations
+    # --- LSH routing index (Sec 4.3) ---
+    lsh_bits: int = 64              # B hyperplane bits
+    lsh_sample: int = 1024          # S sampled vectors
+    lsh_entries: int = 16           # T entry candidates (top-T Hamming)
+    # --- search (Alg. 2) ---
+    beam_width: int = 64            # L: candidate set size
+    io_batch: int = 5               # b: batched I/O size (paper uses 5)
+    max_hops: int = 64              # safety bound on while_loop
+    # --- memory-disk coordination ---
+    memory_mode: MemoryMode = MemoryMode.HYBRID
+    memory_budget_bytes: int | None = None  # drives mode selection when set
+    cache_pages: int = 0            # warmed page cache entries (Sec 4.3)
+    # --- misc ---
+    dtype_bytes: int = 4            # S_dtype: vector element size (f32)
+    id_bytes: int = 4               # S_nbrID
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.dim <= 0:
+            raise ValueError("dim must be positive")
+        if self.pq_subspaces > self.dim:
+            raise ValueError("pq_subspaces cannot exceed dim")
+        if self.dim % self.pq_subspaces != 0:
+            raise ValueError("dim must be divisible by pq_subspaces")
+        if self.lsh_bits % 32 != 0:
+            raise ValueError("lsh_bits must be a multiple of 32 (packed words)")
+
+    @property
+    def pq_code_bytes(self) -> int:
+        return self.pq_subspaces  # one uint8 per subspace
+
+    def resolve_capacity(self) -> int:
+        """Paper Sec 4.2 page-capacity equation, resolved for this config.
+
+        N_nodes = (S_page - 2*S_num_nbrs - S_nbrID*N_nbrs - S_CV*N_CV)
+                  / (D * S_dtype)
+
+        N_CV (compressed vectors co-located on the page) depends on the
+        memory-disk coordination mode: DISK_ONLY keeps a code for every
+        neighbor on-page, MEM_ALL keeps none (codes live in memory and the
+        freed bytes buy more vectors per page), HYBRID keeps half.
+        """
+        if self.page_capacity is not None:
+            return self.page_capacity
+        if self.memory_mode == MemoryMode.DISK_ONLY:
+            n_cv = self.page_degree
+        elif self.memory_mode == MemoryMode.HYBRID:
+            n_cv = self.page_degree // 2
+        else:
+            n_cv = 0
+        s_num_nbrs = 4
+        fixed = 2 * s_num_nbrs + self.id_bytes * self.page_degree \
+            + self.pq_code_bytes * n_cv
+        cap = (self.page_bytes - fixed) // (self.dim * self.dtype_bytes)
+        return max(1, int(cap))

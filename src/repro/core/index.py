@@ -1,0 +1,187 @@
+"""High-level PageANN index: build / search / stats (Fig. 3 pipeline).
+
+Pre-processing stage: Vamana vector graph -> page-node grouping (Alg. 1) ->
+PQ codebooks (coarse on-page + fine in-memory) -> id reassignment + page
+packing (Sec 4.2/5) -> LSH routing index -> memory-disk coordination
+(Sec 4.3) with optional warm-up page caching.
+
+Query stage: ``search`` wraps ``core.search.batch_search`` and translates
+results back to original vector ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout as layout_mod
+from repro.core import lsh as lsh_mod
+from repro.core import page_graph as pg_mod
+from repro.core import pq as pq_mod
+from repro.core import search as search_mod
+from repro.core import vamana as vamana_mod
+from repro.core.config import MemoryMode, PageANNConfig
+
+PAD = -1
+
+
+@dataclasses.dataclass
+class BuildStats:
+    vamana_s: float
+    grouping_s: float
+    pq_s: float
+    pack_s: float
+    lsh_s: float
+    pages: int
+    capacity: int
+    mean_page_degree: float
+    logical_page_bytes: int
+    padded_tile_bytes: int
+    memory_bytes: int
+
+
+@dataclasses.dataclass
+class PageANNIndex:
+    cfg: PageANNConfig
+    store: layout_mod.PageStore
+    tier: layout_mod.MemoryTier
+    lsh: lsh_mod.LSHIndex
+    data: search_mod.SearchData
+    stats: BuildStats
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(
+        x: np.ndarray,
+        cfg: PageANNConfig,
+        mem_subspaces: int | None = None,
+        warmup_queries: np.ndarray | None = None,
+    ) -> "PageANNIndex":
+        x = np.ascontiguousarray(x, np.float32)
+        n, d = x.shape
+        assert d == cfg.dim
+
+        t0 = time.perf_counter()
+        nbrs = vamana_mod.build_vamana(
+            x,
+            degree=cfg.graph_degree,
+            beam=cfg.build_beam,
+            alpha=cfg.alpha,
+            rounds=cfg.build_rounds,
+            seed=cfg.seed,
+        )
+        t1 = time.perf_counter()
+
+        capacity = cfg.resolve_capacity()
+        grouping = pg_mod.group_pages(x, nbrs, capacity, cfg.hop_h)
+        page_nbrs_old = pg_mod.derive_page_edges(x, nbrs, grouping, cfg.page_degree)
+        t2 = time.perf_counter()
+
+        # coarse codes travel on-page; fine codes live in the memory tier
+        m_disk = cfg.pq_subspaces
+        m_mem = mem_subspaces or min(d, 2 * m_disk)
+        disk_books = pq_mod.train_pq(
+            x, m_disk, cfg.pq_ksub, cfg.pq_iters, seed=cfg.seed
+        )
+        mem_books = pq_mod.train_pq(
+            x, m_mem, cfg.pq_ksub, cfg.pq_iters, seed=cfg.seed + 1
+        )
+        disk_codes_old = np.asarray(
+            pq_mod.pq_encode(jnp.asarray(x), jnp.asarray(disk_books))
+        )
+        t3 = time.perf_counter()
+
+        store = layout_mod.pack_pages(x, grouping, page_nbrs_old, disk_codes_old, cfg)
+        x_new = layout_mod.reassigned_vectors(x, store)
+        mem_codes_new = np.asarray(
+            pq_mod.pq_encode(jnp.asarray(x_new), jnp.asarray(mem_books))
+        )
+        t4 = time.perf_counter()
+
+        lsh = lsh_mod.build_lsh(
+            x_new,
+            np.asarray(pq_mod.pq_encode(jnp.asarray(x_new), jnp.asarray(disk_books))),
+            bits=cfg.lsh_bits,
+            sample=cfg.lsh_sample,
+            seed=cfg.seed,
+        )
+        t5 = time.perf_counter()
+
+        tier = layout_mod.build_memory_tier(
+            x_new, mem_codes_new, mem_books, disk_books, cfg.memory_mode
+        )
+        data = search_mod.make_search_data(store, tier, lsh)
+
+        idx = PageANNIndex(
+            cfg=cfg,
+            store=store,
+            tier=tier,
+            lsh=lsh,
+            data=data,
+            stats=BuildStats(
+                vamana_s=t1 - t0,
+                grouping_s=t2 - t1,
+                pq_s=t3 - t2,
+                pack_s=t4 - t3,
+                lsh_s=t5 - t4,
+                pages=store.num_pages,
+                capacity=capacity,
+                mean_page_degree=pg_mod.page_graph_stats(
+                    np.asarray(store.nbr_ids)
+                )["mean_degree"],
+                logical_page_bytes=store.logical_page_bytes(cfg),
+                padded_tile_bytes=store.padded_tile_bytes(),
+                memory_bytes=tier.memory_bytes + lsh.memory_bytes,
+            ),
+        )
+        if warmup_queries is not None and cfg.cache_pages > 0:
+            idx.warm_cache(warmup_queries)
+        return idx
+
+    # ------------------------------------------------------------------ cache
+    def warm_cache(self, queries: np.ndarray) -> None:
+        """Sec 4.3: run a warm-up batch, cache the hottest pages."""
+        res = self._raw_search(jnp.asarray(queries, jnp.float32), k=10)
+        pages = np.asarray(res.ids) // self.store.capacity
+        pages = pages[np.asarray(res.ids) >= 0]
+        uniq, counts = np.unique(pages, return_counts=True)
+        hot = uniq[np.argsort(-counts)][: self.cfg.cache_pages]
+        self.tier = dataclasses.replace(
+            self.tier, cached_pages=jnp.asarray(np.sort(hot).astype(np.int32))
+        )
+        self.data = search_mod.make_search_data(self.store, self.tier, self.lsh)
+
+    # ----------------------------------------------------------------- search
+    def _raw_search(self, q: jnp.ndarray, k: int) -> search_mod.SearchResult:
+        return search_mod.batch_search(
+            q,
+            self.data,
+            k=k,
+            **search_mod.search_kwargs(self.cfg, self.store.capacity),
+        )
+
+    def search(self, queries: np.ndarray, k: int = 10) -> search_mod.SearchResult:
+        """Search; returns ORIGINAL vector ids."""
+        res = self._raw_search(jnp.asarray(queries, jnp.float32), k=k)
+        ids = np.asarray(res.ids)
+        valid = ids >= 0
+        old = np.full_like(ids, PAD)
+        old[valid] = self.store.new_to_old[ids[valid]]
+        return search_mod.SearchResult(
+            ids=old,
+            dists=np.asarray(res.dists),
+            ios=np.asarray(res.ios),
+            hops=np.asarray(res.hops),
+            cache_hits=np.asarray(res.cache_hits),
+        )
+
+
+def recall_at_k(found_ids: np.ndarray, truth_ids: np.ndarray) -> float:
+    """Mean recall@k over a query batch (paper's Recall@10 metric)."""
+    hits = 0
+    q, k = truth_ids.shape
+    for i in range(q):
+        hits += len(set(found_ids[i].tolist()) & set(truth_ids[i].tolist()))
+    return hits / (q * k)

@@ -1,0 +1,196 @@
+"""Page-aligned data layout (paper Sec 4.2, Fig. 5) + vector id reassignment
+(Sec 5, "Vector ID reassignment and data layout").
+
+Each page record holds:  [member vectors | external neighbor vector ids |
+compressed (PQ) vectors of those neighbors | counts].  Vector ids are
+reassigned so that   page_id(v) = v // capacity   and   slot(v) = v % capacity
+— ``calculate_pageID`` in Alg. 2 becomes a shift, no mapping table needed on
+the search path.
+
+TPU adaptation (DESIGN.md §2): the record is padded to (8, 128)-aligned f32
+lanes so one page == one aligned HBM→VMEM DMA burst; the *logical* byte
+accounting below still follows the paper's 4 KB equation and drives the
+read-amplification benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq as pq_mod
+from repro.core.config import MemoryMode, PageANNConfig
+from repro.core.page_graph import PAD, PageGrouping
+
+
+@dataclasses.dataclass
+class PageStore:
+    """The 'disk tier': page records as one big gather-addressable array set."""
+
+    vecs: jnp.ndarray        # (P, capacity, d) f32 — member vectors
+    member_count: jnp.ndarray  # (P,) int32
+    nbr_ids: jnp.ndarray     # (P, R_p) int32, REASSIGNED vector ids, PAD=-1
+    nbr_codes: jnp.ndarray   # (P, R_p, M_disk) uint8 — on-page compressed nbrs
+    nbr_count: jnp.ndarray   # (P,) int32
+    capacity: int
+    dim: int
+    # id reassignment maps (host-side numpy; not used on the search path)
+    new_to_old: np.ndarray   # (N,)
+    old_to_new: np.ndarray   # (N,)
+
+    @property
+    def num_pages(self) -> int:
+        return int(self.vecs.shape[0])
+
+    @property
+    def num_vectors(self) -> int:
+        return int(self.new_to_old.shape[0])
+
+    def logical_page_bytes(self, cfg: PageANNConfig) -> int:
+        """Bytes per page under the paper's Sec 4.2 equation (pre-padding)."""
+        n_cv = self.nbr_codes.shape[1] if cfg.memory_mode != MemoryMode.MEM_ALL else 0
+        if cfg.memory_mode == MemoryMode.HYBRID:
+            n_cv //= 2
+        return int(
+            2 * 4
+            + self.capacity * self.dim * cfg.dtype_bytes
+            + self.nbr_ids.shape[1] * cfg.id_bytes
+            + n_cv * self.nbr_codes.shape[2]
+        )
+
+    def padded_tile_bytes(self) -> int:
+        """Bytes per page after (8,128) f32 lane padding (the DMA burst)."""
+        lanes = self.capacity * self.dim + self.nbr_ids.shape[1] \
+            + self.nbr_codes.shape[1] * self.nbr_codes.shape[2] // 4 + 2
+        rows = -(-lanes // 128)          # ceil to 128-lane rows
+        rows = -(-rows // 8) * 8         # ceil to 8-row sublanes
+        return rows * 128 * 4
+
+
+def reassign_ids(grouping: PageGrouping) -> tuple[np.ndarray, np.ndarray]:
+    """new_id = page * capacity + slot. Returns (new_to_old, old_to_new)."""
+    pages = grouping.pages
+    p, cap = pages.shape
+    n = int((pages != PAD).sum())
+    new_to_old = np.full(p * cap, PAD, np.int64)
+    flat = pages.ravel()
+    valid = flat != PAD
+    new_to_old[valid] = flat[valid]
+    old_to_new = np.full(n, PAD, np.int64)
+    old_to_new[flat[valid]] = np.nonzero(valid)[0]
+    return new_to_old, old_to_new
+
+
+def pack_pages(
+    x: np.ndarray,
+    grouping: PageGrouping,
+    page_nbrs_old: np.ndarray,
+    disk_codes_old: np.ndarray,
+    cfg: PageANNConfig,
+) -> PageStore:
+    """Assemble the page-record arrays in the reassigned id space.
+
+    x: (N, d) original vectors (original id space).
+    page_nbrs_old: (P, R_p) external neighbor *original* vector ids.
+    disk_codes_old: (N, M_disk) on-page PQ codes, original id order.
+    """
+    pages = grouping.pages
+    p, cap = pages.shape
+    d = x.shape[1]
+    new_to_old, old_to_new = reassign_ids(grouping)
+
+    vecs = np.zeros((p, cap, d), np.float32)
+    member_count = (pages != PAD).sum(1).astype(np.int32)
+    flat = pages.ravel()
+    valid = flat != PAD
+    vecs.reshape(p * cap, d)[valid] = x[flat[valid]]
+
+    nbr_valid = page_nbrs_old != PAD
+    nbr_ids = np.full_like(page_nbrs_old, PAD)
+    nbr_ids[nbr_valid] = old_to_new[page_nbrs_old[nbr_valid]]
+    nbr_count = nbr_valid.sum(1).astype(np.int32)
+
+    m_disk = disk_codes_old.shape[1]
+    nbr_codes = np.zeros((*page_nbrs_old.shape, m_disk), np.uint8)
+    nbr_codes[nbr_valid] = disk_codes_old[page_nbrs_old[nbr_valid]]
+
+    return PageStore(
+        vecs=jnp.asarray(vecs),
+        member_count=jnp.asarray(member_count),
+        nbr_ids=jnp.asarray(nbr_ids.astype(np.int32)),
+        nbr_codes=jnp.asarray(nbr_codes),
+        nbr_count=jnp.asarray(nbr_count),
+        capacity=cap,
+        dim=d,
+        new_to_old=new_to_old,
+        old_to_new=old_to_new,
+    )
+
+
+@dataclasses.dataclass
+class MemoryTier:
+    """The 'host memory' tier (Sec 4.3): always-resident arrays.
+
+    mem_codes are the *high-accuracy* PQ codes (more subspaces than the
+    on-page codes) for vectors cached in memory; mem_mask marks which
+    reassigned vector ids are covered (all of them in MEM_ALL mode).
+    """
+
+    mem_codes: jnp.ndarray      # (N_pad, M_mem) uint8, reassigned order
+    mem_mask: jnp.ndarray       # (N_pad,) bool
+    mem_codebooks: jnp.ndarray  # (M_mem, ksub, dsub)
+    disk_codebooks: jnp.ndarray  # (M_disk, ksub, dsub)
+    cached_pages: jnp.ndarray   # (C,) int32 sorted page ids ('warmed' cache)
+
+    @property
+    def memory_bytes(self) -> int:
+        covered = int(np.asarray(self.mem_mask).sum())
+        return covered * self.mem_codes.shape[1] + self.mem_codebooks.size * 4
+
+
+def build_memory_tier(
+    x_new: np.ndarray,
+    mem_codes: np.ndarray,
+    mem_codebooks: np.ndarray,
+    disk_codebooks: np.ndarray,
+    mode: MemoryMode,
+    hybrid_fraction: float = 0.5,
+    cached_pages: np.ndarray | None = None,
+    hot_ids: np.ndarray | None = None,
+) -> MemoryTier:
+    """x_new / mem_codes are in reassigned order, padded to P*cap rows."""
+    n_pad = mem_codes.shape[0]
+    if mode == MemoryMode.MEM_ALL:
+        mask = np.ones(n_pad, bool)
+    elif mode == MemoryMode.DISK_ONLY:
+        mask = np.zeros(n_pad, bool)
+    else:
+        mask = np.zeros(n_pad, bool)
+        k = int(n_pad * hybrid_fraction)
+        if hot_ids is not None:
+            mask[hot_ids[:k]] = True
+        else:
+            mask[:k] = True
+    if cached_pages is None:
+        cached_pages = np.empty((0,), np.int32)
+    return MemoryTier(
+        mem_codes=jnp.asarray(mem_codes),
+        mem_mask=jnp.asarray(mask),
+        mem_codebooks=jnp.asarray(mem_codebooks),
+        disk_codebooks=jnp.asarray(disk_codebooks),
+        cached_pages=jnp.asarray(np.sort(cached_pages).astype(np.int32)),
+    )
+
+
+def reassigned_vectors(x: np.ndarray, store: PageStore) -> np.ndarray:
+    """Vectors in reassigned order, zero rows for padded slots: (P*cap, d)."""
+    return np.asarray(store.vecs).reshape(-1, store.dim)
+
+
+def reassigned_codes(
+    x: np.ndarray, store: PageStore, codebooks: np.ndarray
+) -> np.ndarray:
+    """PQ-encode all vectors in reassigned order (padded slots encode 0)."""
+    xr = reassigned_vectors(x, store)
+    return np.asarray(pq_mod.pq_encode(jnp.asarray(xr), jnp.asarray(codebooks)))

@@ -1,0 +1,106 @@
+"""Lightweight LSH routing index (paper Sec 4.3, "Caching for fast
+lightweight indexing").
+
+A sample of vectors is projected onto random hyperplanes; the sign pattern is
+packed into uint32 words. A query computes its own code, XOR+popcounts against
+the sampled codes, and the top-T smallest Hamming distances become the entry
+candidates for the page-node graph traversal (Alg. 2, line 4).
+
+Adaptation noted in DESIGN.md: the paper probes all buckets within Hamming
+radius r; we take top-T by Hamming distance — identical candidates for small
+r, but fixed-shape and TPU-friendly (one XOR/popcount sweep, one top-k).
+The sweep's Pallas kernel lives in ``repro.kernels.hamming``.
+
+The sampled vectors' PQ codes are kept alongside (a few KB) so entry
+candidates always have an estimated distance, even in DISK_ONLY mode —
+this is the paper's 0.05 GB minimum-memory configuration.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _popcount32(v: jnp.ndarray) -> jnp.ndarray:
+    """Bit-twiddling popcount on uint32 lanes (no intrinsics needed)."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """(..., B) {0,1} -> (..., B//32) uint32, little-endian within a word."""
+    *lead, b = bits.shape
+    w = b // 32
+    bits = bits.reshape(*lead, w, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (bits << shifts).sum(-1).astype(jnp.uint32)
+
+
+def hash_codes(x: jnp.ndarray, planes: jnp.ndarray) -> jnp.ndarray:
+    """Random-hyperplane binary hash, packed. x: (N, d), planes: (d, B)."""
+    bits = (x @ planes > 0).astype(jnp.uint32)
+    return pack_bits(bits)
+
+
+def hamming_distance(codes: jnp.ndarray, qcode: jnp.ndarray) -> jnp.ndarray:
+    """Hamming distances between packed codes (S, W) and a query code (W,).
+
+    Pure-jnp oracle for ``repro.kernels.hamming``.
+    """
+    return _popcount32(jnp.bitwise_xor(codes, qcode[None, :])).sum(-1)
+
+
+@dataclasses.dataclass
+class LSHIndex:
+    planes: jnp.ndarray        # (d, B) float32
+    sample_ids: jnp.ndarray    # (S,) int32 — vector ids (reassigned space)
+    sample_codes: jnp.ndarray  # (S, B//32) uint32
+    sample_pq: jnp.ndarray     # (S, M) uint8 — PQ codes of the sample
+
+    @property
+    def memory_bytes(self) -> int:
+        return int(
+            self.planes.size * 4
+            + self.sample_ids.size * 4
+            + self.sample_codes.size * 4
+            + self.sample_pq.size
+        )
+
+    def query(self, q: jnp.ndarray, top_t: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Entry vector ids + Hamming distances for a single query (d,)."""
+        qcode = hash_codes(q[None, :], self.planes)[0]
+        ham = hamming_distance(self.sample_codes, qcode)
+        top = jnp.argsort(ham)[:top_t]
+        return self.sample_ids[top], ham[top]
+
+
+def build_lsh(
+    x: np.ndarray,
+    pq_codes: np.ndarray,
+    bits: int,
+    sample: int,
+    seed: int = 0,
+) -> LSHIndex:
+    """Sample vectors, hash them, remember their ids and PQ codes.
+
+    ``x`` must already be in the *reassigned* id space (row i == vector id i)
+    so that routed entries can be mapped to pages with id // capacity.
+    """
+    n, d = x.shape
+    rng = np.random.default_rng(seed)
+    sample = min(sample, n)
+    ids = rng.choice(n, size=sample, replace=False).astype(np.int32)
+    planes = rng.standard_normal((d, bits)).astype(np.float32)
+    codes = hash_codes(jnp.asarray(x[ids], jnp.float32), jnp.asarray(planes))
+    return LSHIndex(
+        planes=jnp.asarray(planes),
+        sample_ids=jnp.asarray(ids),
+        sample_codes=codes,
+        sample_pq=jnp.asarray(pq_codes[ids]),
+    )

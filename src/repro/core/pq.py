@@ -1,0 +1,109 @@
+"""Product quantization: the compressed vector representation of the paper.
+
+PageANN keeps PQ codes (a) inside page records for neighbor vectors
+(DISK_ONLY / HYBRID coordination modes) and (b) in the in-memory tier
+(HYBRID / MEM_ALL). Distances to the query are estimated with asymmetric
+distance computation (ADC): per-query LUTs of squared distances between each
+query sub-vector and every centroid, summed over subspaces via code lookups.
+
+The ADC inner loop is the compute hot spot of next-hop selection; its TPU
+kernel lives in ``repro.kernels.pq_adc`` with ``pq.adc_distance`` as oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("ksub", "iters"))
+def _kmeans_1sub(xsub, key, *, ksub, iters):
+    """Lloyd k-means for one PQ subspace. xsub: (N, dsub)."""
+    n = xsub.shape[0]
+    init = jax.random.choice(key, n, (ksub,), replace=n < ksub)
+    cents = xsub[init]
+
+    def step(cents, _):
+        d = (
+            (xsub * xsub).sum(-1)[:, None]
+            - 2.0 * xsub @ cents.T
+            + (cents * cents).sum(-1)[None, :]
+        )
+        assign = jnp.argmin(d, axis=1)
+        one_hot = jax.nn.one_hot(assign, ksub, dtype=xsub.dtype)  # (N, K)
+        counts = one_hot.sum(0)                                    # (K,)
+        sums = one_hot.T @ xsub                                    # (K, dsub)
+        new = jnp.where(
+            counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1), cents
+        )
+        return new, None
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    return cents
+
+
+def train_pq(
+    x: np.ndarray, m: int, ksub: int = 256, iters: int = 12, seed: int = 0
+) -> np.ndarray:
+    """Train PQ codebooks. Returns (M, ksub, dsub) float32."""
+    x = jnp.asarray(x, jnp.float32)
+    n, d = x.shape
+    dsub = d // m
+    xs = x.reshape(n, m, dsub).transpose(1, 0, 2)  # (M, N, dsub)
+    keys = jax.random.split(jax.random.PRNGKey(seed), m)
+    cents = jax.vmap(
+        lambda xsub, k: _kmeans_1sub(xsub, k, ksub=ksub, iters=iters)
+    )(xs, keys)
+    return np.asarray(cents)
+
+
+@jax.jit
+def pq_encode(x: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Encode vectors to PQ codes. x: (N, d) -> (N, M) uint8."""
+    n, d = x.shape
+    m, ksub, dsub = codebooks.shape
+    xs = x.reshape(n, m, dsub)
+
+    def enc(sub, cents):  # sub: (N, dsub), cents: (ksub, dsub)
+        dist = (
+            (sub * sub).sum(-1)[:, None]
+            - 2.0 * sub @ cents.T
+            + (cents * cents).sum(-1)[None, :]
+        )
+        return jnp.argmin(dist, axis=1)
+
+    codes = jax.vmap(enc, in_axes=(1, 0), out_axes=1)(xs, codebooks)
+    return codes.astype(jnp.uint8)
+
+
+@jax.jit
+def pq_lut(q: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Per-query ADC lookup table: (M, ksub) squared sub-distances."""
+    m, ksub, dsub = codebooks.shape
+    qs = q.reshape(m, 1, dsub)
+    return ((qs - codebooks) ** 2).sum(-1)  # (M, ksub)
+
+
+def adc_distance(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Asymmetric distance: sum LUT entries selected by codes.
+
+    codes: (..., M) uint8; lut: (M, ksub) -> (...,) float32.
+    This is the pure-jnp oracle mirrored by the Pallas kernel
+    ``repro.kernels.pq_adc``.
+    """
+    idx = codes.astype(jnp.int32)                        # (..., M)
+    vals = jax.vmap(lambda t, i: t[i], in_axes=(0, -1), out_axes=-1)(lut, idx)
+    return vals.sum(-1)
+
+
+@jax.jit
+def pq_decode(codes: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct approximate vectors from codes (for diagnostics)."""
+    m, ksub, dsub = codebooks.shape
+    idx = codes.astype(jnp.int32)  # (N, M)
+    parts = jax.vmap(lambda cb, i: cb[i], in_axes=(0, 1), out_axes=1)(
+        codebooks, idx
+    )  # (N, M, dsub)
+    return parts.reshape(codes.shape[0], m * dsub)

@@ -1,0 +1,282 @@
+"""PageANN graph search — Algorithm 2, as a fixed-shape JAX program.
+
+Per query the loop maintains
+  * a candidate set (size-L, distance-sorted, visited flags) over *vector*
+    ids in the reassigned space (page = id // capacity),
+  * a visited-page bitmap (the paper's visited set V),
+  * a running exact-distance result set (size-K),
+and per hop it (1) picks up to b closest unvisited candidates whose pages are
+new, (2) gathers those page records in one batched read — the I/O unit, (3)
+scores every member vector exactly (MXU L2 kernel), (4) scores the pages'
+external neighbors with ADC over on-page or in-memory PQ codes depending on
+the memory-disk coordination mode, and (5) merges both sets.
+
+Everything is fixed-shape: the loop is a ``lax.while_loop``, queries are
+vmapped, and the whole thing jits (and lowers for TPU meshes — see
+``core.distributed``). I/O and cache-hit counters reproduce the paper's
+"Mean I/Os" metric.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pq as pq_mod
+from repro.core.config import MemoryMode, PageANNConfig
+from repro.core.layout import MemoryTier, PageStore
+from repro.core.lsh import LSHIndex, hamming_distance, hash_codes
+
+PAD = -1
+INF = jnp.inf
+
+
+class SearchData(NamedTuple):
+    """All device arrays the search touches (a single pytree argument)."""
+
+    # disk tier (page records)
+    vecs: jnp.ndarray          # (P, cap, d)
+    member_count: jnp.ndarray  # (P,)
+    nbr_ids: jnp.ndarray       # (P, Rp)
+    nbr_codes: jnp.ndarray     # (P, Rp, M_disk)
+    nbr_count: jnp.ndarray     # (P,)
+    # memory tier
+    mem_codes: jnp.ndarray     # (N_pad, M_mem)
+    mem_mask: jnp.ndarray      # (N_pad,)
+    mem_codebooks: jnp.ndarray
+    disk_codebooks: jnp.ndarray
+    cached_pages: jnp.ndarray  # (C,) sorted
+    # routing index
+    lsh_planes: jnp.ndarray
+    lsh_ids: jnp.ndarray
+    lsh_codes: jnp.ndarray
+    lsh_pq: jnp.ndarray        # (S, M_disk)
+
+
+def make_search_data(store: PageStore, tier: MemoryTier, lsh: LSHIndex) -> SearchData:
+    return SearchData(
+        vecs=store.vecs,
+        member_count=store.member_count,
+        nbr_ids=store.nbr_ids,
+        nbr_codes=store.nbr_codes,
+        nbr_count=store.nbr_count,
+        mem_codes=tier.mem_codes,
+        mem_mask=tier.mem_mask,
+        mem_codebooks=tier.mem_codebooks,
+        disk_codebooks=tier.disk_codebooks,
+        cached_pages=tier.cached_pages,
+        lsh_planes=lsh.planes,
+        lsh_ids=lsh.sample_ids,
+        lsh_codes=lsh.sample_codes,
+        lsh_pq=lsh.sample_pq,
+    )
+
+
+class SearchResult(NamedTuple):
+    ids: jnp.ndarray      # (Q, k) reassigned vector ids
+    dists: jnp.ndarray    # (Q, k) exact squared distances
+    ios: jnp.ndarray      # (Q,) page reads that went to 'disk'
+    hops: jnp.ndarray     # (Q,) while_loop iterations
+    cache_hits: jnp.ndarray  # (Q,) page reads served by the warmed cache
+
+
+def _mask_dups_keep_first(ids: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """Set distance to INF for duplicate ids (keeping one occurrence)."""
+    order = jnp.argsort(ids)
+    s = ids[order]
+    dup_sorted = jnp.concatenate([jnp.array([False]), s[1:] == s[:-1]])
+    dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
+    return jnp.where(dup & (ids != PAD), INF, d)
+
+
+def _search_one(
+    q: jnp.ndarray,
+    data: SearchData,
+    *,
+    capacity: int,
+    beam: int,
+    io_batch: int,
+    k: int,
+    max_hops: int,
+    entries: int,
+    mode: str,
+):
+    P = data.vecs.shape[0]
+    cap, d = data.vecs.shape[1], data.vecs.shape[2]
+    rp = data.nbr_ids.shape[1]
+
+    disk_lut = pq_mod.pq_lut(q, data.disk_codebooks)  # (M_disk, ksub)
+    mem_lut = pq_mod.pq_lut(q, data.mem_codebooks)    # (M_mem, ksub)
+
+    # ---- in-memory routing (Alg. 2 line 4, Fig. 6 step 1) ----
+    qcode = hash_codes(q[None], data.lsh_planes)[0]
+    ham = hamming_distance(data.lsh_codes, qcode)
+    top = jnp.argsort(ham)[:entries]
+    entry_ids = data.lsh_ids[top].astype(jnp.int32)
+    entry_d = pq_mod.adc_distance(data.lsh_pq[top], disk_lut)
+    entry_d = _mask_dups_keep_first(entry_ids, entry_d)
+
+    cand_ids = jnp.full((beam,), PAD, jnp.int32)
+    cand_d = jnp.full((beam,), INF, jnp.float32)
+    cand_vis = jnp.zeros((beam,), bool)
+    cand_ids = cand_ids.at[:entries].set(entry_ids)
+    cand_d = cand_d.at[:entries].set(entry_d)
+
+    page_vis = jnp.zeros((P,), bool)
+    res_ids = jnp.full((k,), PAD, jnp.int32)
+    res_d = jnp.full((k,), INF, jnp.float32)
+    io = jnp.int32(0)
+    hits = jnp.int32(0)
+    hops = jnp.int32(0)
+
+    def cond(state):
+        cand_ids, cand_d, cand_vis, page_vis, res_ids, res_d, io, hits, hops = state
+        live = (~cand_vis) & (cand_ids != PAD) & jnp.isfinite(cand_d)
+        return live.any() & (hops < max_hops)
+
+    def body(state):
+        cand_ids, cand_d, cand_vis, page_vis, res_ids, res_d, io, hits, hops = state
+
+        # ---- select up to b closest unvisited candidates on fresh pages ----
+        batch = jnp.full((io_batch,), PAD, jnp.int32)
+
+        def pick(j, carry):
+            cand_vis, page_vis, batch = carry
+            # skip candidates whose page is already visited/scheduled
+            cpages = jnp.where(cand_ids >= 0, cand_ids // capacity, 0)
+            stale = (cand_ids != PAD) & page_vis[cpages]
+            cand_vis2 = cand_vis | stale
+            masked = jnp.where(
+                cand_vis2 | (cand_ids == PAD), INF, cand_d
+            )
+            slot = jnp.argmin(masked)
+            ok = jnp.isfinite(masked[slot])
+            cand_vis2 = cand_vis2.at[slot].set(True)
+            pid = jnp.where(ok, cand_ids[slot] // capacity, PAD)
+            page_vis = jnp.where(
+                ok, page_vis.at[jnp.maximum(pid, 0)].set(True), page_vis
+            )
+            batch = batch.at[j].set(pid)
+            return cand_vis2, page_vis, batch
+
+        cand_vis, page_vis, batch = jax.lax.fori_loop(
+            0, io_batch, pick, (cand_vis, page_vis, batch)
+        )
+
+        # ---- batched page read (Fig. 6 step 2): THE I/O ----
+        safe = jnp.maximum(batch, 0)
+        page_vecs = data.vecs[safe]            # (b, cap, d)
+        page_mc = data.member_count[safe]      # (b,)
+        page_nids = data.nbr_ids[safe]         # (b, Rp)
+        page_ncodes = data.nbr_codes[safe]     # (b, Rp, M_disk)
+        page_nc = data.nbr_count[safe]
+
+        fetched = batch >= 0
+        # warmed page cache (Sec 4.3): sorted-membership test
+        if data.cached_pages.shape[0] > 0:
+            pos = jnp.searchsorted(data.cached_pages, safe)
+            pos = jnp.minimum(pos, data.cached_pages.shape[0] - 1)
+            in_cache = data.cached_pages[pos] == safe
+        else:
+            in_cache = jnp.zeros_like(fetched)
+        io = io + (fetched & ~in_cache).sum().astype(jnp.int32)
+        hits = hits + (fetched & in_cache).sum().astype(jnp.int32)
+
+        # ---- exact distances for every member vector (step 5) ----
+        ex = jnp.sum((page_vecs - q[None, None, :]) ** 2, axis=-1)  # (b, cap)
+        slots = jnp.arange(cap)[None, :]
+        ex = jnp.where(slots < page_mc[:, None], ex, INF)
+        ex = jnp.where(fetched[:, None], ex, INF)
+        mids = (batch[:, None] * capacity + slots).astype(jnp.int32)
+        all_rd = jnp.concatenate([res_d, ex.ravel()])
+        all_ri = jnp.concatenate([res_ids, mids.ravel()])
+        order = jnp.argsort(all_rd)[:k]
+        res_d, res_ids = all_rd[order], all_ri[order]
+
+        # ---- estimated distances for page neighbors (steps 3-4) ----
+        flat_nids = page_nids.reshape(-1)                       # (b*Rp,)
+        valid_n = (
+            (jnp.arange(rp)[None, :] < page_nc[:, None]).reshape(-1)
+            & (flat_nids != PAD)
+            & fetched.repeat(rp)
+        )
+        safe_nids = jnp.maximum(flat_nids, 0)
+        est_disk = pq_mod.adc_distance(
+            page_ncodes.reshape(-1, page_ncodes.shape[-1]), disk_lut
+        )
+        if mode == MemoryMode.DISK_ONLY.value:
+            est = est_disk
+        elif mode == MemoryMode.MEM_ALL.value:
+            est = pq_mod.adc_distance(data.mem_codes[safe_nids], mem_lut)
+        else:  # HYBRID: prefer the higher-accuracy in-memory codes
+            est_mem = pq_mod.adc_distance(data.mem_codes[safe_nids], mem_lut)
+            est = jnp.where(data.mem_mask[safe_nids], est_mem, est_disk)
+        est = jnp.where(valid_n, est, INF)
+        # skip neighbors on already-visited pages
+        est = jnp.where(page_vis[safe_nids // capacity], INF, est)
+        # skip neighbors already in the candidate set
+        dup_in_cand = (flat_nids[:, None] == cand_ids[None, :]).any(1)
+        est = jnp.where(dup_in_cand, INF, est)
+        # dedupe within this batch
+        est = _mask_dups_keep_first(flat_nids, est)
+
+        all_ci = jnp.concatenate([cand_ids, flat_nids])
+        all_cd = jnp.concatenate([cand_d, est])
+        all_cv = jnp.concatenate([cand_vis, jnp.zeros_like(valid_n)])
+        order = jnp.argsort(all_cd)[:beam]
+        return (
+            all_ci[order], all_cd[order], all_cv[order],
+            page_vis, res_ids, res_d, io, hits, hops + 1,
+        )
+
+    state = (cand_ids, cand_d, cand_vis, page_vis, res_ids, res_d, io, hits, hops)
+    state = jax.lax.while_loop(cond, body, state)
+    _, _, _, _, res_ids, res_d, io, hits, hops = state
+    return res_ids, res_d, io, hops, hits
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "capacity", "beam", "io_batch", "k", "max_hops", "entries", "mode"
+    ),
+)
+def batch_search(
+    queries: jnp.ndarray,
+    data: SearchData,
+    *,
+    capacity: int,
+    beam: int,
+    io_batch: int,
+    k: int,
+    max_hops: int,
+    entries: int,
+    mode: str,
+) -> SearchResult:
+    """Search a batch of queries. queries: (Q, d)."""
+    fn = functools.partial(
+        _search_one,
+        data=data,
+        capacity=capacity,
+        beam=beam,
+        io_batch=io_batch,
+        k=k,
+        max_hops=max_hops,
+        entries=entries,
+        mode=mode,
+    )
+    ids, dists, ios, hops, hits = jax.vmap(fn)(queries)
+    return SearchResult(ids=ids, dists=dists, ios=ios, hops=hops, cache_hits=hits)
+
+
+def search_kwargs(cfg: PageANNConfig, capacity: int) -> dict:
+    return dict(
+        capacity=capacity,
+        beam=cfg.beam_width,
+        io_batch=cfg.io_batch,
+        max_hops=cfg.max_hops,
+        entries=cfg.lsh_entries,
+        mode=cfg.memory_mode.value,
+    )

@@ -1,0 +1,192 @@
+"""Vamana graph construction (DiskANN's graph; the substrate of Alg. 1).
+
+Build is offline pre-processing in the paper. Here it is a numpy/JAX hybrid:
+greedy beam searches are batched and jitted (the compute hot spot), robust
+pruning and reverse-edge insertion run sequentially on host (cheap, pointer
+chasing). The resulting fixed-degree adjacency (N, R) int32 array, padded
+with -1, feeds the page-node grouping in ``page_graph.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD = -1
+
+
+def l2_sq(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Squared L2 distance matrix between rows of a and rows of b."""
+    return (
+        (a * a).sum(-1)[:, None]
+        - 2.0 * a @ b.T
+        + (b * b).sum(-1)[None, :]
+    )
+
+
+def medoid(x: np.ndarray) -> int:
+    """Point closest to the dataset mean (the fixed search entry point)."""
+    mean = x.mean(axis=0, keepdims=True)
+    return int(np.argmin(l2_sq(mean, x)[0]))
+
+
+@functools.partial(jax.jit, static_argnames=("beam", "iters"))
+def _greedy_search_batch(x, nbrs, queries, entry, *, beam, iters):
+    """Batched greedy beam search over a fixed-degree vector graph.
+
+    Returns for every query the visited/expanded node ids and their exact
+    distances (the candidate pool Vamana prunes from). Fixed shapes:
+    ids (Q, beam + iters*R), dists likewise; unexpanded slots are PAD/inf.
+    """
+    n, r = nbrs.shape
+
+    def one(q):
+        # beam state: ascending by distance; expanded flags
+        ids0 = jnp.full((beam,), PAD, jnp.int32).at[0].set(entry)
+        d0 = jnp.full((beam,), jnp.inf, jnp.float32).at[0].set(
+            jnp.sum((x[entry] - q) ** 2)
+        )
+        exp0 = jnp.zeros((beam,), bool)
+        trail_ids0 = jnp.full((iters * r,), PAD, jnp.int32)
+        trail_d0 = jnp.full((iters * r,), jnp.inf, jnp.float32)
+
+        def body(i, state):
+            ids, d, exp, t_ids, t_d = state
+            # best unexpanded beam slot
+            masked = jnp.where(exp | (ids == PAD), jnp.inf, d)
+            slot = jnp.argmin(masked)
+            done = jnp.isinf(masked[slot])
+            cur = ids[slot]
+            exp = exp.at[slot].set(True)
+            cand = nbrs[jnp.maximum(cur, 0)]                  # (R,)
+            cand = jnp.where(done, PAD, cand)
+            cd = jnp.sum((x[jnp.maximum(cand, 0)] - q) ** 2, axis=-1)
+            cd = jnp.where(cand == PAD, jnp.inf, cd)
+            # drop candidates already in beam
+            dup = (cand[:, None] == ids[None, :]).any(axis=1)
+            cd = jnp.where(dup, jnp.inf, cd)
+            t_ids = jax.lax.dynamic_update_slice(t_ids, cand, (i * r,))
+            t_d = jax.lax.dynamic_update_slice(t_d, cd, (i * r,))
+            # merge candidates into beam
+            all_ids = jnp.concatenate([ids, cand])
+            all_d = jnp.concatenate([d, cd])
+            all_exp = jnp.concatenate([exp, jnp.zeros((r,), bool)])
+            order = jnp.argsort(all_d)[:beam]
+            return (all_ids[order], all_d[order], all_exp[order], t_ids, t_d)
+
+        ids, d, _, t_ids, t_d = jax.lax.fori_loop(
+            0, iters, body, (ids0, d0, exp0, trail_ids0, trail_d0)
+        )
+        return jnp.concatenate([ids, t_ids]), jnp.concatenate([d, t_d])
+
+    return jax.vmap(one)(queries)
+
+
+def robust_prune(
+    point: int,
+    cand_ids: np.ndarray,
+    cand_d: np.ndarray,
+    x: np.ndarray,
+    degree: int,
+    alpha: float,
+) -> np.ndarray:
+    """DiskANN robust prune: keep diverse close neighbors."""
+    keep_mask = (cand_ids != PAD) & (cand_ids != point) & np.isfinite(cand_d)
+    ids, d = cand_ids[keep_mask], cand_d[keep_mask]
+    ids, first = np.unique(ids, return_index=True)
+    d = d[first]
+    order = np.argsort(d)
+    ids, d = ids[order], d[order]
+    out: list[int] = []
+    alive = np.ones(len(ids), bool)
+    for i in range(len(ids)):
+        if not alive[i]:
+            continue
+        p = ids[i]
+        out.append(int(p))
+        if len(out) >= degree:
+            break
+        # kill candidates closer (x alpha) to p than to the point
+        rest = alive & (np.arange(len(ids)) > i)
+        if rest.any():
+            rid = ids[rest]
+            d_pc = ((x[rid] - x[p]) ** 2).sum(-1)
+            alive[rest] &= ~(alpha * d_pc <= d[rest])
+    res = np.full((degree,), PAD, np.int32)
+    res[: len(out)] = out
+    return res
+
+
+def build_vamana(
+    x: np.ndarray,
+    degree: int = 32,
+    beam: int = 64,
+    alpha: float = 1.2,
+    rounds: int = 2,
+    batch: int = 256,
+    seed: int = 0,
+) -> np.ndarray:
+    """Build a Vamana graph; returns (N, degree) int32 adjacency, PAD-padded."""
+    x = np.asarray(x, np.float32)
+    n = len(x)
+    rng = np.random.default_rng(seed)
+    degree = min(degree, n - 1)
+    # random regular init
+    nbrs = np.full((n, degree), PAD, np.int32)
+    for i in range(n):
+        c = rng.choice(n - 1, size=min(degree, n - 1), replace=False)
+        c[c >= i] += 1
+        nbrs[i, : len(c)] = c
+    start = medoid(x)
+    iters = max(8, beam // 2)
+
+    for rnd in range(rounds):
+        a = 1.0 if rnd < rounds - 1 else alpha
+        order = rng.permutation(n)
+        for lo in range(0, n, batch):
+            pts = order[lo : lo + batch]
+            jx = jnp.asarray(x)
+            jn = jnp.asarray(nbrs)
+            cand_ids, cand_d = _greedy_search_batch(
+                jx, jn, jnp.asarray(x[pts]), start, beam=beam, iters=iters
+            )
+            cand_ids = np.asarray(cand_ids)
+            cand_d = np.asarray(cand_d)
+            for j, p in enumerate(pts):
+                p = int(p)
+                # prune candidate pool + current neighbors into new adjacency
+                pool_ids = np.concatenate([cand_ids[j], nbrs[p]])
+                cur = nbrs[p][nbrs[p] != PAD]
+                pool_d = np.concatenate(
+                    [cand_d[j], ((x[cur] - x[p]) ** 2).sum(-1)]
+                    if len(cur)
+                    else [cand_d[j], np.zeros((degree - len(cur),)) + np.inf]
+                )
+                if len(pool_d) < len(pool_ids):
+                    pool_d = np.concatenate(
+                        [pool_d, np.full(len(pool_ids) - len(pool_d), np.inf)]
+                    )
+                nbrs[p] = robust_prune(p, pool_ids, pool_d, x, degree, a)
+                # reverse edges
+                for u in nbrs[p]:
+                    if u == PAD:
+                        continue
+                    row = nbrs[u]
+                    if p in row:
+                        continue
+                    free = np.where(row == PAD)[0]
+                    if len(free):
+                        nbrs[u, free[0]] = p
+                    else:
+                        pool = np.concatenate([row, [p]]).astype(np.int32)
+                        pd = ((x[pool] - x[u]) ** 2).sum(-1)
+                        nbrs[u] = robust_prune(int(u), pool, pd, x, degree, a)
+    return nbrs
+
+
+def brute_force_knn(x: np.ndarray, q: np.ndarray, k: int) -> np.ndarray:
+    """Exact kNN ids (ground truth for recall@k)."""
+    d = l2_sq(np.asarray(q, np.float32), np.asarray(x, np.float32))
+    return np.argsort(d, axis=1)[:, :k].astype(np.int32)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: XOR + popcount Hamming sweep for the LSH router.
+
+codes are packed 32-bit words; popcount is the classic SWAR bit-twiddle on
+the VPU (no popcount intrinsic needed). One block = (block_s, W) codes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(codes_ref, q_ref, o_ref):
+    c = codes_ref[...].astype(jnp.uint32)            # (bs, W)
+    q = q_ref[...].astype(jnp.uint32)                # (1, W)
+    v = jnp.bitwise_xor(c, q)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    pc = ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    o_ref[...] = pc.sum(-1, keepdims=True)           # (bs, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def hamming(
+    codes: jnp.ndarray,
+    qcode: jnp.ndarray,
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """codes: (S, W) uint32, qcode: (W,) uint32 -> (S,) int32."""
+    s0, w = codes.shape
+    s = -(-s0 // block_s) * block_s
+    cp = jnp.pad(codes, ((0, s - s0), (0, 0)))
+    out = pl.pallas_call(
+        _hamming_kernel,
+        grid=(s // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, 1), jnp.int32),
+        interpret=interpret,
+    )(cp, qcode[None, :])
+    return out[:s0, 0]

@@ -1,0 +1,53 @@
+"""Dispatching wrappers: Pallas kernel on TPU, pure-jnp oracle elsewhere.
+
+The search path calls these; on this CPU container they resolve to the
+oracles (fast under XLA:CPU), while tests force ``impl='pallas'`` with
+interpret=True to validate the TPU kernels themselves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import hamming as hamming_k
+from repro.kernels import l2dist as l2_k
+from repro.kernels import page_gather as pg_k
+from repro.kernels import pq_adc as adc_k
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def l2_distance(q, x, *, impl: str | None = None, interpret: bool = False):
+    use = impl or ("pallas" if _on_tpu() else "ref")
+    if use == "pallas":
+        return l2_k.l2_distance(q, x, interpret=interpret or not _on_tpu())
+    return ref.l2_distance_ref(q, x)
+
+
+def pq_adc(codes, lut, *, impl: str | None = None, interpret: bool = False):
+    use = impl or ("pallas" if _on_tpu() else "ref")
+    if use == "pallas":
+        return adc_k.pq_adc(codes, lut, interpret=interpret or not _on_tpu())
+    return ref.pq_adc_ref(codes, lut)
+
+
+def hamming(codes, qcode, *, impl: str | None = None, interpret: bool = False):
+    use = impl or ("pallas" if _on_tpu() else "ref")
+    if use == "pallas":
+        return hamming_k.hamming(
+            codes, qcode, interpret=interpret or not _on_tpu()
+        )
+    return ref.hamming_ref(codes, qcode)
+
+
+def page_gather_l2(pages, page_ids, q, *, impl: str | None = None,
+                   interpret: bool = False):
+    use = impl or ("pallas" if _on_tpu() else "ref")
+    if use == "pallas":
+        return pg_k.page_gather_l2(
+            pages, page_ids, q, interpret=interpret or not _on_tpu()
+        )
+    return ref.page_gather_l2_ref(pages, page_ids, q)

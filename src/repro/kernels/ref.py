@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth; tests sweep shapes/dtypes and
+assert_allclose the kernel (interpret=True on CPU) against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2_distance_ref(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 distances. q: (Bq, d), x: (Nx, d) -> (Bq, Nx) f32."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    return (
+        (q * q).sum(-1)[:, None]
+        - 2.0 * q @ x.T
+        + (x * x).sum(-1)[None, :]
+    )
+
+
+def pq_adc_ref(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """ADC distance. codes: (N, M) uint8, lut: (M, K) f32 -> (N,) f32."""
+    idx = codes.astype(jnp.int32)                     # (N, M)
+    m = lut.shape[0]
+    rows = jnp.arange(m)[None, :]                     # (1, M)
+    return lut[rows, idx].astype(jnp.float32).sum(-1)
+
+
+def hamming_ref(codes: jnp.ndarray, qcode: jnp.ndarray) -> jnp.ndarray:
+    """Hamming distance between packed uint32 codes.
+
+    codes: (S, W) uint32, qcode: (W,) uint32 -> (S,) int32.
+    """
+    v = jnp.bitwise_xor(codes, qcode[None, :]).astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    pc = ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    return pc.sum(-1)
+
+
+def page_gather_l2_ref(
+    pages: jnp.ndarray, page_ids: jnp.ndarray, q: jnp.ndarray
+) -> jnp.ndarray:
+    """Gather page records and score members against the query.
+
+    pages: (P, cap, d) f32, page_ids: (b,) int32 (>=0), q: (d,)
+    -> (b, cap) squared L2 distances.
+    """
+    gathered = pages[page_ids]                         # (b, cap, d)
+    diff = gathered.astype(jnp.float32) - q.astype(jnp.float32)[None, None, :]
+    return (diff * diff).sum(-1)

@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+partitions, and compiles for the production meshes — and extract its
+roofline terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The two lines above MUST precede any other import: jax locks the device
+count at first init, and the dry-run needs 512 placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.launch import roofline as rf
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.launch.shardings import (
+    batch_specs,
+    cache_spec_tree,
+    state_specs,
+    to_shardings,
+)
+from repro.models.frontend import decode_input_specs, train_input_specs
+from repro.models.sharding import Rules
+from repro.models.transformer import init_cache
+from repro.train.step import init_train_state, make_serve_step, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+# >=400 GB of params: shard FSDP across the pod axis too (DESIGN §6).
+_FSDP_POD_THRESHOLD = 400e9
+
+
+def _rules(mesh, arch) -> Rules:
+    return Rules(
+        mesh,
+        fsdp_over_pod=arch.param_count() >= _FSDP_POD_THRESHOLD,
+        replicate_kv=arch.replicate_kv,
+    )
+
+
+def lower_train(arch, shape, mesh, zero1: bool = False):
+    rules = _rules(mesh, arch)
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(arch, jax.random.PRNGKey(0))
+    )
+    state_spec = state_specs(state_shapes, rules)
+    state_sh = to_shardings(state_spec, mesh)
+    b_spec = batch_specs(arch, shape, rules)
+    b_sh = to_shardings(b_spec, mesh)
+    step_fn = make_train_step(arch, shape, rules, zero1=zero1)
+    batch_sds = train_input_specs(arch, shape)
+    with mesh:
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(state_sh, b_sh),
+            donate_argnums=(0,),
+        ).lower(state_shapes, batch_sds)
+    return lowered
+
+
+def lower_serve(arch, shape, mesh):
+    """decode_* / long_*: one new token against a seq_len cache."""
+    rules = _rules(mesh, arch)
+    params_shapes = jax.eval_shape(
+        lambda: init_train_state(arch, jax.random.PRNGKey(0))
+    ).params
+    from repro.models.sharding import param_specs
+
+    params_sh = to_shardings(param_specs(params_shapes, rules), mesh)
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(arch, shape.global_batch, shape.seq_len)
+    )
+    cache_sh = to_shardings(cache_spec_tree(cache_shapes, arch, rules), mesh)
+    ins = decode_input_specs(arch, shape)
+    serve = make_serve_step(arch)
+    args = [params_shapes, cache_shapes, ins["token"], ins["pos"]]
+    shardings = [params_sh, cache_sh, None, None]
+    if arch.mrope:
+        args.append(ins["positions3"])
+        shardings.append(None)
+    with mesh:
+        lowered = jax.jit(
+            serve,
+            in_shardings=tuple(shardings),
+            donate_argnums=(1,),
+        ).lower(*args)
+    return lowered
+
+
+def lower_prefill(arch, shape, mesh):
+    """prefill_32k: full forward over the prompt (logits)."""
+    import dataclasses
+
+    arch = dataclasses.replace(arch, attn_fwd_only=True)
+    rules = _rules(mesh, arch)
+    params_shapes = jax.eval_shape(
+        lambda: init_train_state(arch, jax.random.PRNGKey(0))
+    ).params
+    from repro.models.sharding import param_specs
+    from repro.models.transformer import forward_train
+
+    params_sh = to_shardings(param_specs(params_shapes, rules), mesh)
+    specs = train_input_specs(arch, shape)
+    specs.pop("labels")
+    b_spec = {
+        k: v for k, v in batch_specs(arch, shape, rules).items() if k != "labels"
+    }
+    b_sh = to_shardings(b_spec, mesh)
+
+    def prefill_fn(params, batch):
+        logits, _ = forward_train(params, batch, arch, rules=rules)
+        return logits
+
+    with mesh:
+        lowered = jax.jit(
+            prefill_fn, in_shardings=(params_sh, b_sh)
+        ).lower(params_shapes, specs)
+    return lowered
+
+
+import dataclasses
+
+
+def _units(arch) -> int:
+    """Scan units: hybrid archs scan blocks, everything else scans layers."""
+    if arch.family == "hybrid":
+        return (arch.num_layers - len(arch.tail_pattern)) // len(arch.block_pattern)
+    return arch.num_layers
+
+
+def _with_units(arch, n: int):
+    if arch.family == "hybrid":
+        L = n * len(arch.block_pattern) + len(arch.tail_pattern)
+    else:
+        L = n
+    return dataclasses.replace(arch, num_layers=L, unroll_loops=True)
+
+
+def _cost_of(lowered) -> dict:
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    return rf.cost_terms(compiled, hlo)
+
+
+_COST_KEYS = ("hlo_flops", "hlo_bytes", "collective_bytes")
+
+
+def _lin(c1: dict, c2: dict, u1: int, u2: int, u: float) -> dict:
+    """Linear extrapolation of cost counters in the unit count. A negative
+    slope is nonphysical (cost_analysis noise from folding/aliasing) —
+    fall back to per-unit proportional scaling."""
+    out = {}
+    for k in _COST_KEYS:
+        slope = (c2[k] - c1[k]) / (u2 - u1)
+        if slope < 0:
+            out[k] = c2[k] / u2 * u
+        else:
+            out[k] = max(c1[k] + slope * (u - u1), 0.0)
+    return out
+
+
+def _sub(a: dict, b: dict) -> dict:
+    return {k: a[k] - b[k] for k in _COST_KEYS}
+
+
+def _add(a: dict, b: dict, scale: float = 1.0) -> dict:
+    return {k: max(a[k] + scale * b[k], 0.0) for k in _COST_KEYS}
+
+
+def calibrated_counters(arch, shape, mesh, zero1: bool = False) -> dict:
+    """True per-step flop/byte/collective counters, extrapolated from small
+    fully-unrolled lowerings (XLA cost_analysis counts loop bodies once, so
+    the full lowering's counters are NOT trip-count aware; see §Dry-run).
+
+    Train: cost(L, m) = O(L) + m * S(L) with O, S linear in scan units —
+    four calibration points. Prefill/decode: linear in units — two points.
+    """
+    u1, u2 = 1, 2
+    if shape.kind == "train":
+        from repro.train.step import effective_microbatches
+
+        num_mb = effective_microbatches(shape, _rules(mesh, arch))
+        shape = dataclasses.replace(shape, num_microbatches=num_mb)
+        mb_batch = shape.global_batch // num_mb
+        sh1 = dataclasses.replace(
+            shape, global_batch=mb_batch, num_microbatches=1
+        )
+        sh2 = dataclasses.replace(
+            shape, global_batch=2 * mb_batch, num_microbatches=2
+        )
+        p = {}
+        for u in (u1, u2):
+            a = _with_units(arch, u)
+            p[(u, 1)] = _cost_of(lower_train(a, sh1, mesh, zero1=zero1))
+            p[(u, 2)] = _cost_of(lower_train(a, sh2, mesh, zero1=zero1))
+        s1 = _sub(p[(u1, 2)], p[(u1, 1)])   # one extra microbatch at u1
+        s2 = _sub(p[(u2, 2)], p[(u2, 1)])
+        o1 = _sub(p[(u1, 1)], s1)           # mb-independent part at u1
+        o2 = _sub(p[(u2, 1)], s2)
+        uf = _units(arch)
+        s_full = _lin(s1, s2, u1, u2, uf)
+        o_full = _lin(o1, o2, u1, u2, uf)
+        return _add(o_full, s_full, scale=shape.num_microbatches)
+    # prefill / decode
+    if shape.kind == "prefill":
+        calib = lambda a: dataclasses.replace(
+            a, q_chunk=4096, kv_chunk=4096
+        )  # fewer unrolled chunk bodies; flop totals are chunk-size invariant
+        c1 = _cost_of(lower_prefill(calib(_with_units(arch, u1)), shape, mesh))
+        c2 = _cost_of(lower_prefill(calib(_with_units(arch, u2)), shape, mesh))
+    else:
+        c1 = _cost_of(lower_serve(_with_units(arch, u1), shape, mesh))
+        c2 = _cost_of(lower_serve(_with_units(arch, u2), shape, mesh))
+    return _lin(c1, c2, u1, u2, _units(arch))
+
+
+def dryrun_cell(
+    arch_id: str, shape_id: str, multi_pod: bool, verbose=True,
+    arch_overrides: dict | None = None, zero1: bool = False,
+) -> dict:
+    arch = get_arch(arch_id)
+    if arch_overrides:
+        arch = dataclasses.replace(arch, **arch_overrides)
+    shape = SHAPES[shape_id]
+    ok, why = shape_applicable(arch, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {
+        "arch": arch_id, "shape": shape_id, "mesh": mesh_name,
+        "status": "skip" if not ok else None, "skip_reason": why or None,
+    }
+    if not ok:
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        lowered = lower_train(arch, shape, mesh, zero1=zero1)
+    elif shape.kind == "prefill":
+        lowered = lower_prefill(arch, shape, mesh)
+    else:
+        lowered = lower_serve(arch, shape, mesh)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    hlo = compiled.as_text()
+    terms = rf.cost_terms(compiled, hlo)
+    mem = rf.memory_stats(compiled)
+    mf = rf.model_flops(arch, shape)
+    n_dev = mesh.size
+    rec.update(
+        status="ok",
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        devices=n_dev,
+        model_flops_global=mf,
+        model_flops_per_device=mf / n_dev,
+        hlo_bytes_text=len(hlo),
+        raw_loop_body_terms=terms,       # trip-count-blind (structure only)
+        collective_breakdown=terms["collective_breakdown"],
+        collective_counts=terms["collective_counts"],
+        memory=mem,
+    )
+    # the roofline table is single-pod only; calibration is the expensive
+    # part, so multi-pod cells stop at the compile proof.
+    if not multi_pod:
+        t3 = time.perf_counter()
+        calib = calibrated_counters(arch, shape, mesh, zero1=zero1)
+        t4 = time.perf_counter()
+        cterms = rf.terms_from_counters(calib)
+        rec.update(
+            calib_s=round(t4 - t3, 2),
+            **cterms,                    # calibrated, trip-count-true
+            useful_flops_ratio=(mf / n_dev) / cterms["hlo_flops"]
+            if cterms["hlo_flops"] else None,
+        )
+    peak = mem.get("peak_bytes_per_device")
+    if peak is not None:
+        rec["fits_hbm"] = bool(peak <= HBM_BYTES)
+        rec["peak_gib_per_device"] = round(peak / 2**30, 3)
+    if verbose:
+        print(json.dumps({k: v for k, v in rec.items() if k != "memory"}))
+        print("memory:", mem)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for aid in archs:
+        for sid in shapes:
+            for mp in meshes:
+                tag = f"{aid}_{sid}_{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skip"):
+                            continue
+                try:
+                    rec = dryrun_cell(aid, sid, mp)
+                except Exception as e:
+                    failures += 1
+                    rec = {
+                        "arch": aid, "shape": sid,
+                        "mesh": "pod2x16x16" if mp else "pod16x16",
+                        "status": "error", "error": repr(e),
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    print(f"FAIL {tag}: {e!r}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

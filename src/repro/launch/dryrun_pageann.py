@@ -1,0 +1,136 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run of the PAPER'S OWN workload at production scale: the sharded
+PageANN index (SIFT100M-like: 100M x 128 uint8->f32, 4 KB pages) lowered
+and compiled on the production meshes.
+
+The search loop is data-dependent (while_loop), so cost_analysis reports
+one *hop-batch body*; the roofline row multiplies by the measured mean hop
+count from the CPU benchmark (recall_io) — recorded in EXPERIMENTS.md
+§Roofline as the pageann-serve rows.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_pageann --mesh both
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MemoryMode, PageANNConfig
+from repro.core import distributed as dist
+from repro.core import search as search_mod
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+
+SDS = jax.ShapeDtypeStruct
+
+# SIFT100M geometry (paper Table 2) under the Sec 4.2 page equation
+N_VECTORS = 100_000_000
+DIM = 128
+QUERY_BATCH = 1024
+MEAN_HOPS = 18.0        # measured by benchmarks/recall_io on the CPU proxy
+
+
+def synthetic_sharded_specs(cfg: PageANNConfig, num_shards: int):
+    cap = cfg.resolve_capacity()
+    per_shard = N_VECTORS // num_shards
+    pages = -(-per_shard // cap)
+    n_pad = pages * cap
+    rp, m = cfg.page_degree, cfg.pq_subspaces
+    m_mem = 2 * m
+    s = num_shards
+    data = search_mod.SearchData(
+        vecs=SDS((s, pages, cap, DIM), jnp.float32),
+        member_count=SDS((s, pages), jnp.int32),
+        nbr_ids=SDS((s, pages, rp), jnp.int32),
+        nbr_codes=SDS((s, pages, rp, m), jnp.uint8),
+        nbr_count=SDS((s, pages), jnp.int32),
+        mem_codes=SDS((s, n_pad, m_mem), jnp.uint8),
+        mem_mask=SDS((s, n_pad), jnp.bool_),
+        mem_codebooks=SDS((s, m_mem, cfg.pq_ksub, DIM // m_mem), jnp.float32),
+        disk_codebooks=SDS((s, m, cfg.pq_ksub, DIM // m), jnp.float32),
+        cached_pages=SDS((s, 4096), jnp.int32),
+        lsh_planes=SDS((s, DIM, cfg.lsh_bits), jnp.float32),
+        lsh_ids=SDS((s, cfg.lsh_sample), jnp.int32),
+        lsh_codes=SDS((s, cfg.lsh_sample, cfg.lsh_bits // 32), jnp.uint32),
+        lsh_pq=SDS((s, cfg.lsh_sample, m), jnp.uint8),
+    )
+    return data, cap, pages
+
+
+def run(multi_pod: bool, mode: str = "hybrid", io_batch: int = 5) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shard_axis_size = mesh.shape["data"]
+    cfg = PageANNConfig(
+        dim=DIM, graph_degree=32, page_degree=48, pq_subspaces=16,
+        lsh_sample=262_144, lsh_bits=64, lsh_entries=32,
+        beam_width=128, io_batch=io_batch, max_hops=64,
+        memory_mode=MemoryMode(mode),
+    )
+    data, cap, pages = synthetic_sharded_specs(cfg, shard_axis_size)
+    queries = SDS((QUERY_BATCH, DIM), jnp.float32)
+    fn, in_shard = dist.make_sharded_search(mesh, cfg, cap, k=10)
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = jax.jit(
+            lambda d, q: fn(d, q), in_shardings=in_shard
+        ).lower(data, queries)
+        compiled = lowered.compile()
+    t1 = time.perf_counter()
+    hlo = compiled.as_text()
+    body = rf.cost_terms(compiled, hlo)
+    mem = rf.memory_stats(compiled)
+    # per-query totals: body counters are per while-iteration (hop batch)
+    scaled = {
+        "hlo_flops": body["hlo_flops"] * MEAN_HOPS,
+        "hlo_bytes": body["hlo_bytes"] * MEAN_HOPS,
+        "collective_bytes": body["collective_bytes"],  # merge happens once
+    }
+    terms = rf.terms_from_counters(scaled)
+    rec = {
+        "arch": "pageann-sift100m", "shape": f"serve_q{QUERY_BATCH}",
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "mode": mode, "io_batch": io_batch,
+        "status": "ok",
+        "devices": mesh.size,
+        "pages_per_shard": pages, "page_capacity": cap,
+        "compile_s": round(t1 - t0, 2),
+        "mean_hops_assumed": MEAN_HOPS,
+        "raw_loop_body_terms": body,
+        **terms,
+        "memory": mem,
+    }
+    peak = mem.get("peak_bytes_per_device")
+    if peak is not None:
+        from repro.launch.mesh import HBM_BYTES
+
+        rec["peak_gib_per_device"] = round(peak / 2**30, 3)
+        rec["fits_hbm"] = bool(peak <= HBM_BYTES)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default="hybrid",
+                    choices=[m.value for m in MemoryMode])
+    ap.add_argument("--io-batch", type=int, default=5)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for mp in {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]:
+        rec = run(mp, mode=args.mode, io_batch=args.io_batch)
+        suffix = "" if (args.mode == "hybrid" and args.io_batch == 5) \
+            else f"_{args.mode}_b{args.io_batch}"
+        tag = f"pageann_serve_{'multi' if mp else 'single'}{suffix}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        print(json.dumps({k: v for k, v in rec.items() if k != "memory"}))
+
+
+if __name__ == "__main__":
+    main()

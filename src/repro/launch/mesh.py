@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Functions (not module constants) so importing never touches jax device
+state. Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis carries
+only data parallelism (+ optional FSDP for the >=400B archs), keeping the
+slow inter-pod links off the per-layer critical path.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke runs of the same code path."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
+    )
+
+
+# TPU v5e hardware constants used by the roofline (EXPERIMENTS.md §Roofline).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (per chip, one direction)
+HBM_BYTES = 16 * 2**30        # 16 GiB per chip

@@ -1,0 +1,143 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / ICI_BW
+
+cost_analysis() reports the per-device (SPMD) module. collective bytes are
+not in cost_analysis, so we parse the post-partitioning HLO text and sum
+the output-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute (``-start`` counted, ``-done`` skipped).
+"""
+from __future__ import annotations
+
+import re
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_LINE_RE = re.compile(
+    r"=\s*(?P<ty>\(?[a-z0-9_\[\]\{\}:,\s\#\*]*?\)?)\s*"
+    r"(?P<kind>" + "|".join(_COLL_KINDS) + r")(?P<phase>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind byte totals + op counts from post-SPMD HLO text."""
+    out = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for m in _LINE_RE.finditer(hlo_text):
+        if m.group("phase") == "-done":
+            continue
+        kind = m.group("kind")
+        out[kind] += _shape_bytes(m.group("ty"))
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    out["counts"] = counts
+    return out
+
+
+def cost_terms(compiled, hlo_text: str) -> dict:
+    """The three roofline terms (seconds) + raw counters."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    terms = {
+        "hlo_flops": flops,
+        "hlo_bytes": byts,
+        "collective_bytes": float(coll["total"]),
+        "collective_breakdown": {
+            k: coll[k] for k in _COLL_KINDS
+        },
+        "collective_counts": coll["counts"],
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": byts / HBM_BW,
+        "collective_s": coll["total"] / ICI_BW,
+    }
+    dom = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms
+
+
+def terms_from_counters(counters: dict) -> dict:
+    """Roofline terms from (possibly calibrated) raw counters."""
+    flops = counters["hlo_flops"]
+    byts = counters["hlo_bytes"]
+    coll = counters["collective_bytes"]
+    terms = {
+        "hlo_flops": flops,
+        "hlo_bytes": byts,
+        "collective_bytes": coll,
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": byts / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    dom = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # XLA:CPU may not expose it for all programs
+        return {"error": str(e)}
+    out = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if hasattr(ma, k):
+            out[k] = int(getattr(ma, k))
+    if "argument_size_in_bytes" in out:
+        out["peak_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def model_flops(arch, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N = active params), 2*N per
+    generated token for decode."""
+    n = arch.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,123 @@
+"""Input/state sharding builders for the dry-run and the drivers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.sharding import Rules, param_specs
+
+
+def _dp(rules: Rules, size: int):
+    """dp axes if the dim is divisible, else replicate."""
+    import numpy as np
+
+    dp_size = int(np.prod([rules.mesh.shape[a] for a in rules.dp]))
+    if size % dp_size == 0:
+        return rules.dp if len(rules.dp) > 1 else rules.dp[0]
+    return None
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeConfig, rules: Rules) -> dict:
+    from repro.models.frontend import train_input_specs
+
+    specs = train_input_specs(arch, shape)
+    out = {}
+    for k, v in specs.items():
+        if k == "positions3":
+            out[k] = P(None, _dp(rules, v.shape[1]), None)
+        else:
+            out[k] = P(_dp(rules, v.shape[0]), *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def state_specs(state_shapes, rules: Rules):
+    """TrainState sharding: params by PARAM_RULES; optimizer moments follow
+    their parameter's layout (same tree structure rank-matched)."""
+    params_spec = param_specs(state_shapes.params, rules)
+
+    def moment_spec(path, leaf):
+        # AdamW m/v mirror params exactly; Adafactor vr/vc drop trailing dims
+        del path
+        return None
+
+    # opt_state: match by structure — AdamW: m, v same spec as params;
+    # Adafactor: vr (param rank-1), vc (rank-2 + last dim) — derive by rank.
+    def derive(spec_tree, leaf_tree):
+        flat_specs = jax.tree.leaves(spec_tree)
+        flat_params = jax.tree.leaves(state_shapes.params)
+        by_shape = list(zip(flat_params, flat_specs))
+
+        def match(leaf):
+            shape = tuple(leaf.shape)
+            for p, s in by_shape:
+                ps = tuple(p.shape)
+                if shape == ps:
+                    return s
+                if shape == ps[:-1]:  # adafactor vr
+                    return P(*tuple(s)[:-1])
+                if len(ps) >= 2 and shape == ps[:-2] + ps[-1:]:  # vc
+                    return P(*(tuple(s)[:-2] + tuple(s)[-1:]))
+            return P()
+
+        return jax.tree.map(match, leaf_tree)
+
+    opt = state_shapes.opt_state
+    if hasattr(opt, "m"):  # AdamW
+        opt_spec = type(opt)(
+            step=P(),
+            m=jax.tree.map(lambda s: s, params_spec),
+            v=jax.tree.map(lambda s: s, params_spec),
+        )
+    else:  # Adafactor
+        opt_spec = type(opt)(
+            step=P(),
+            vr=derive(params_spec, opt.vr),
+            vc=derive(params_spec, opt.vc),
+        )
+    from repro.train.step import TrainState
+
+    return TrainState(params=params_spec, opt_state=opt_spec, step=P())
+
+
+def cache_spec_tree(cache_shapes, arch: ArchConfig, rules: Rules):
+    """KV / SSM / RG-LRU cache shardings (see DESIGN §6 serving notes):
+    batch over dp when divisible; KV *sequence* over 'model' (flash-
+    decoding style split-KV); SSM heads / recurrence width over 'model'."""
+
+    def leaf_spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            key = getattr(p, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        from repro.models.sharding import fix_spec
+
+        if name in ("k", "v"):
+            core = (_dp(rules, shape[nd - 4]), "model", None, None)
+            spec = P(*((None,) * (nd - 4) + core))
+        elif name == "conv":
+            core = (_dp(rules, shape[nd - 3]), None, "model")
+            spec = P(*((None,) * (nd - 3) + core))
+        elif name == "ssd":
+            core = (_dp(rules, shape[nd - 4]), "model", None, None)
+            spec = P(*((None,) * (nd - 4) + core))
+        elif name == "h":
+            core = (_dp(rules, shape[nd - 2]), "model")
+            spec = P(*((None,) * (nd - 2) + core))
+        else:
+            raise KeyError(f"no cache rule for {name}")
+        return fix_spec(spec, shape, rules.mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

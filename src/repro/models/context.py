@@ -1,0 +1,46 @@
+"""Trace-time sharding context.
+
+``forward_train`` installs the active ``Rules`` here so that deeply nested
+layers (MoE dispatch, SSD scan) can pin activation shardings without
+threading a mesh handle through every call. This is trace-time state only —
+it never leaks into the jitted computation.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_rules = contextvars.ContextVar("repro_sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules):
+    tok = _rules.set(rules)
+    try:
+        yield
+    finally:
+        _rules.reset(tok)
+
+
+def current_dp_size() -> int:
+    """Product of the active dp mesh axes (1 when no rules installed)."""
+    rules = _rules.get()
+    if rules is None:
+        return 1
+    import numpy as np
+
+    return int(np.prod([rules.mesh.shape[a] for a in rules.dp]))
+
+
+def act_shard(x, *logical):
+    """Constrain activation ``x`` to the logical axes if rules are active."""
+    rules = _rules.get()
+    if rules is None:
+        return x
+    from repro.models.sharding import fix_spec
+
+    spec = fix_spec(rules.spec(*logical), x.shape, rules.mesh)
+    import jax
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

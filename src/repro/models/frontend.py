@@ -1,0 +1,65 @@
+"""Input specs per (arch x shape): ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation.
+
+Modality frontends are STUBS per the assignment: ``[audio]`` supplies
+precomputed frame embeddings, ``[vlm]`` supplies M-RoPE position triples
+(the dynamic-resolution encoding); both bypass the real CNN/ViT towers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.transformer import FRONTEND_DIM
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    specs: dict = {}
+    if arch.embed_inputs:
+        specs["tokens"] = SDS((b, t), jnp.int32)
+    else:
+        specs["embeds"] = SDS((b, t, FRONTEND_DIM), jnp.bfloat16)
+    specs["labels"] = SDS((b, t), jnp.int32)
+    specs["positions"] = SDS((b, t), jnp.int32)
+    if arch.mrope:
+        specs["positions3"] = SDS((3, b, t), jnp.int32)
+    return specs
+
+
+def decode_input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict:
+    """serve_step inputs: one new token against a seq_len KV cache."""
+    b = shape.global_batch
+    specs: dict = {"token": SDS((b,), jnp.int32), "pos": SDS((), jnp.int32)}
+    if arch.mrope:
+        specs["positions3"] = SDS((3, b, 1), jnp.int32)
+    return specs
+
+
+def cache_specs(arch: ArchConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree mirroring transformer.init_cache."""
+    from repro.models.transformer import init_cache
+
+    return jax.eval_shape(lambda: init_cache(arch, batch, max_len))
+
+
+def make_train_batch(arch: ArchConfig, b: int, t: int, key) -> dict:
+    """Concrete small batch for smoke tests."""
+    ks = jax.random.split(key, 3)
+    batch: dict = {
+        "labels": jax.random.randint(ks[1], (b, t), 0, arch.vocab_size),
+        "positions": jnp.broadcast_to(jnp.arange(t)[None], (b, t)).astype(jnp.int32),
+    }
+    if arch.embed_inputs:
+        batch["tokens"] = jax.random.randint(ks[0], (b, t), 0, arch.vocab_size)
+    else:
+        batch["embeds"] = jax.random.normal(
+            ks[0], (b, t, FRONTEND_DIM), jnp.bfloat16
+        )
+    if arch.mrope:
+        p = jnp.broadcast_to(jnp.arange(t)[None, None], (3, b, t)).astype(jnp.int32)
+        batch["positions3"] = p
+    return batch

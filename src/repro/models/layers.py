@@ -1,0 +1,330 @@
+"""Shared transformer layers: RMSNorm, RoPE / M-RoPE, blockwise (flash-style)
+GQA attention, decode attention, gated MLP.
+
+All functions are pure; params are plain dicts so layer stacks can be
+``lax.scan``-ed (HLO size O(1) in depth) and sharded by name via
+``models.sharding.PARAM_RULES``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+# ------------------------------------------------------------------- RoPE ---
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (B, T, H, hd); positions: (B, T) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta=10000.0):
+    """Multimodal RoPE (Qwen2-VL): three position streams (t, h, w) rotate
+    disjoint sections of the head dim. positions3: (3, B, T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    # build a per-frequency position by selecting the stream for its section
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)
+    ])                                                     # (hd/2,)
+    pos = positions3.astype(jnp.float32)                   # (3, B, T)
+    pos_per_freq = pos[sec]                                # (hd/2, B, T)
+    ang = jnp.moveaxis(pos_per_freq, 0, -1) * freqs        # (B, T, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention ---
+def blockwise_attention(
+    q, k, v, *, causal: bool, window: int = 0,
+    q_chunk: int = 512, kv_chunk: int = 1024, q_offset=0, fwd_only: bool = False,
+    unroll: bool = False,
+):
+    """Flash-style online-softmax attention with GQA and optional local
+    window. Memory is O(q_chunk x kv_chunk) per step instead of O(T^2):
+    mandatory for the 32k prefill cells (DESIGN §5).
+
+    q: (B, Tq, H, hd); k, v: (B, Tk, KvH, hd). Returns (B, Tq, H, hd).
+    Causal masking assumes q positions are ``q_offset + [0, Tq)`` against
+    k positions ``[0, Tk)``.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KvH = k.shape[1], k.shape[2]
+    G = H // KvH
+    q_chunk = min(q_chunk, Tq)
+    kv_chunk = min(kv_chunk, Tk)
+    # pad T dims to chunk multiples
+    pq = -Tq % q_chunk
+    pk = -Tk % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Tqp, Tkp = Tq + pq, Tk + pk
+    nq, nk = Tqp // q_chunk, Tkp // kv_chunk
+
+    scale = hd ** -0.5
+    qr = (q * scale).reshape(B, Tqp, KvH, G, hd).transpose(0, 2, 3, 1, 4)
+    kr = k.transpose(0, 2, 1, 3)          # (B, KvH, Tkp, hd)
+    vr = v.transpose(0, 2, 1, 3)
+
+    def q_block(iq):
+        qi = lax.dynamic_slice_in_dim(qr, iq * q_chunk, q_chunk, axis=3)
+        qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        m0 = jnp.full((B, KvH, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KvH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KvH, G, q_chunk, hd), jnp.float32)
+
+        def kv_step(ik, carry):
+            m, l, acc = carry
+            kj = lax.dynamic_slice_in_dim(kr, ik * kv_chunk, kv_chunk, axis=2)
+            vj = lax.dynamic_slice_in_dim(vr, ik * kv_chunk, kv_chunk, axis=2)
+            s = jnp.einsum(
+                "bkgqh,bkch->bkgqc", qi, kj,
+                preferred_element_type=jnp.float32,
+            )
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            mask = kpos[None, :] < Tk
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            new_m = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - new_m[..., None])
+            p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+            corr = jnp.exp(m - new_m)
+            corr = jnp.where(m <= NEG_INF / 2, 0.0, corr)
+            l2 = l * corr + p.sum(-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkch->bkgqh", p, vj.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return new_m, l2, acc2
+
+        if causal and fwd_only:
+            # forward-only fast path (prefill): skip kv chunks that are
+            # entirely masked for this q chunk. Dynamic loop bounds are not
+            # reverse-differentiable, so training uses the static loop below
+            # (masked contributions are exact zeros either way).
+            hi_pos = q_offset + (iq + 1) * q_chunk
+            hi = jnp.minimum((hi_pos + kv_chunk - 1) // kv_chunk, nk)
+            if window:
+                lo_pos = q_offset + iq * q_chunk - (window - 1)
+                lo = jnp.maximum(jnp.maximum(lo_pos, 0) // kv_chunk, 0)
+            else:
+                lo = jnp.int32(0)
+            m, l, acc = lax.fori_loop(lo, hi, kv_step, (m0, l0, a0))
+        else:
+            m, l, acc = lax.fori_loop(
+                0, nk, kv_step, (m0, l0, a0), unroll=True if unroll else None
+            )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out                                  # (B, KvH, G, qc, hd)
+
+    _, blocks = lax.scan(
+        lambda c, iq: (c, q_block(iq)), None, jnp.arange(nq), unroll=unroll
+    )                                               # (nq, B, KvH, G, qc, hd)
+    out = blocks.transpose(1, 2, 3, 0, 4, 5).reshape(B, KvH, G, Tqp, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tqp, H, hd)
+    return out[:, :Tq].astype(q.dtype)
+
+
+def decode_attention(q1, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token attention against a KV cache.
+
+    q1: (B, H, hd); caches: (B, S, KvH, hd); cache_len: () or (B,) valid
+    length (the new token's position is cache_len - 1 after append).
+    """
+    B, H, hd = q1.shape
+    S, KvH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KvH
+    scale = hd ** -0.5
+    qr = (q1 * scale).reshape(B, KvH, G, hd)
+    s = jnp.einsum(
+        "bkgh,bskh->bkgs", qr, k_cache, preferred_element_type=jnp.float32
+    )
+    pos = jnp.arange(S)
+    cl = jnp.asarray(cache_len).reshape(-1, 1)       # (B or 1, 1)
+    mask = pos[None, :] < cl
+    if window:
+        mask &= pos[None, :] >= cl - window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskh->bkgh", p, v_cache, preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, H, hd).astype(q1.dtype)
+
+
+def pairscan_attention(
+    q, k, v, *, causal: bool, window: int = 0,
+    q_chunk: int = 512, kv_chunk: int = 1024, q_offset: int = 0,
+    unroll: bool = False,
+):
+    """Triangular pair-scan attention (§Perf lever `attn_pairs`).
+
+    The masked blockwise loop above computes every (q_chunk x kv_chunk)
+    pair and zeroes the fully-masked ones — ~2x attention FLOP waste under
+    causal masking. Here the needed (iq, ik) pairs are enumerated
+    *statically* and a single scan walks them, updating the online-softmax
+    state of q-chunk iq in place. Exact causal FLOPs, fixed trip count
+    (reverse-differentiable), same numerics.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KvH = k.shape[1], k.shape[2]
+    G = H // KvH
+    q_chunk = min(q_chunk, Tq)
+    kv_chunk = min(kv_chunk, Tk)
+    pq_ = -Tq % q_chunk
+    pk_ = -Tk % kv_chunk
+    if pq_:
+        q = jnp.pad(q, ((0, 0), (0, pq_), (0, 0), (0, 0)))
+    if pk_:
+        k = jnp.pad(k, ((0, 0), (0, pk_), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk_), (0, 0), (0, 0)))
+    Tqp, Tkp = Tq + pq_, Tk + pk_
+    nq, nk = Tqp // q_chunk, Tkp // kv_chunk
+
+    pairs = []
+    for iq in range(nq):
+        if causal:
+            hi = min(
+                -(-(q_offset + (iq + 1) * q_chunk) // kv_chunk), nk
+            )
+        else:
+            hi = nk
+        lo = 0
+        if window:
+            lo = max(0, (q_offset + iq * q_chunk - (window - 1)) // kv_chunk)
+        for ik in range(lo, hi):
+            pairs.append((iq, ik))
+    pair_arr = jnp.asarray(pairs, jnp.int32)          # (P, 2)
+
+    scale = hd ** -0.5
+    qr = (q * scale).reshape(B, Tqp, KvH, G, hd).transpose(0, 2, 3, 1, 4)
+    kr = k.transpose(0, 2, 1, 3)
+    vr = v.transpose(0, 2, 1, 3)
+
+    m0 = jnp.full((nq, B, KvH, G, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, B, KvH, G, q_chunk), jnp.float32)
+    a0 = jnp.zeros((nq, B, KvH, G, q_chunk, hd), jnp.float32)
+
+    def step(carry, pair):
+        m, l, acc = carry
+        iq, ik = pair[0], pair[1]
+        qi = lax.dynamic_slice_in_dim(qr, iq * q_chunk, q_chunk, axis=3)
+        kj = lax.dynamic_slice_in_dim(kr, ik * kv_chunk, kv_chunk, axis=2)
+        vj = lax.dynamic_slice_in_dim(vr, ik * kv_chunk, kv_chunk, axis=2)
+        s = jnp.einsum(
+            "bkgqh,bkch->bkgqc", qi, kj, preferred_element_type=jnp.float32
+        )
+        qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+        kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+        mask = kpos[None, :] < Tk
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mi = m[iq]
+        new_m = jnp.maximum(mi, s.max(-1))
+        p = jnp.exp(s - new_m[..., None])
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        corr = jnp.exp(mi - new_m)
+        corr = jnp.where(mi <= NEG_INF / 2, 0.0, corr)
+        li = l[iq] * corr + p.sum(-1)
+        ai = acc[iq] * corr[..., None] + jnp.einsum(
+            "bkgqc,bkch->bkgqh", p, vj.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m.at[iq].set(new_m), l.at[iq].set(li), acc.at[iq].set(ai)), None
+
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), pair_arr, unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (nq, B, KvH, G, qc, hd)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, KvH, G, Tqp, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tqp, H, hd)
+    return out[:, :Tq].astype(q.dtype)
+
+
+# ------------------------------------------------------------------- MLP ---
+def gated_mlp(params, x):
+    """SwiGLU MLP. x: (..., d)."""
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ------------------------------------------------------------------ inits ---
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def init_attention(key, cfg, dtype):
+    d, H, KvH = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), 0, dtype),
+        "wk": dense_init(ks[1], (d, KvH, hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, KvH, hd), 0, dtype),
+        "wo": dense_init(ks[3], (H, hd, d), 0, dtype) / (2 * cfg.num_layers) ** 0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KvH, hd), dtype)
+        p["bv"] = jnp.zeros((KvH, hd), dtype)
+    return p
+
+
+def init_mlp(key, d, ff, dtype, num_layers=1):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), 0, dtype),
+        "w_up": dense_init(ks[1], (d, ff), 0, dtype),
+        "w_down": dense_init(ks[2], (ff, d), 0, dtype) / (2 * num_layers) ** 0.5,
+    }
+
+
+def attention_qkv(params, x, cfg, positions=None, positions3=None):
+    """Project + rotate. Returns q (B,T,H,hd), k, v (B,T,KvH,hd)."""
+    q = jnp.einsum("btd,dhx->bthx", x, params["wq"])
+    k = jnp.einsum("btd,dhx->bthx", x, params["wk"])
+    v = jnp.einsum("btd,dhx->bthx", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.mrope and positions3 is not None:
+        q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_out(params, attn):
+    return jnp.einsum("bthx,hxd->btd", attn, params["wo"])

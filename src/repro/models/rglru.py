@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+  r_t = sigmoid(x_t . W_a + b_a)              (recurrence gate)
+  i_t = sigmoid(x_t . W_x + b_x)              (input gate)
+  a_t = exp(c * softplus(Lambda) * (-r_t))    (learned decay, c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses an associative scan over T (log-depth); decode is the
+O(1) per-token update — this is what keeps the ``long_500k`` cell runnable
+for the hybrid arch. The surrounding block is the Griffin recurrent block:
+linear in -> temporal conv (width 4) -> RG-LRU -> gated linear out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "rg_in": dense_init(ks[0], (d, 2 * w), 0, dtype),   # [x | gate]
+        "rg_out": dense_init(ks[1], (w, d), 0, dtype) / (2 * cfg.num_layers) ** 0.5,
+        "rg_conv_w": dense_init(ks[2], (cfg.conv_width, w), 0, dtype),
+        "rg_conv_b": jnp.zeros((w,), dtype),
+        "rg_a_param": jnp.log(
+            jnp.expm1(jnp.linspace(0.9, 0.999, w)) + 0.0
+        ).astype(jnp.float32),  # softplus^-1 of decay targets
+        "rg_wa": dense_init(ks[4], (w, 1), 0, jnp.float32)[:, 0],
+        "rg_wx": dense_init(ks[5], (w, 1), 0, jnp.float32)[:, 0],
+    }
+
+
+def _gates(params, x):
+    """x: (..., w) -> (a_t, gated input). Diagonal gates (elementwise)."""
+    r = jax.nn.sigmoid(x.astype(jnp.float32) * params["rg_wa"])
+    i = jax.nn.sigmoid(x.astype(jnp.float32) * params["rg_wx"])
+    log_a = -_C * jax.nn.softplus(params["rg_a_param"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_scan(params, x, h0=None):
+    """x: (B, T, w). Returns (y, h_T). Associative scan over time."""
+    a, gx = _gates(params, x)          # (B, T, w) each
+    if h0 is not None:
+        # fold the carried state in as a virtual timestep contribution
+        gx = gx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    A, Y = lax.associative_scan(combine, (a, gx), axis=1)
+    return Y.astype(x.dtype), Y[:, -1]
+
+
+def rglru_step(params, x1, h):
+    """One-token step. x1: (B, w); h: (B, w) f32."""
+    a, gx = _gates(params, x1)
+    h_new = a * h + gx
+    return h_new.astype(x1.dtype), h_new
+
+
+def _conv(params, x, conv_state=None):
+    w = params["rg_conv_w"]
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    return out + params["rg_conv_b"], xp[:, -(width - 1):]
+
+
+def recurrent_block(params, u, cfg, state=None):
+    """Full Griffin recurrent block. u: (B, T, d). Returns (out, new_state)."""
+    proj = u @ params["rg_in"]
+    x, gate = jnp.split(proj, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    h0 = None if state is None else state["h"]
+    x, new_conv = _conv(params, x, conv_state)
+    y, hT = rglru_scan(params, x, h0)
+    y = y * jax.nn.gelu(gate)
+    return y @ params["rg_out"], {"conv": new_conv, "h": hT}
+
+
+def recurrent_block_step(params, u1, cfg, state):
+    """One-token step. u1: (B, d)."""
+    proj = u1 @ params["rg_in"]
+    x1, gate = jnp.split(proj, 2, axis=-1)
+    conv = state["conv"]
+    w = params["rg_conv_w"]
+    xp = jnp.concatenate([conv, x1[:, None, :]], axis=1)
+    xc = (xp * w[None]).sum(1) + params["rg_conv_b"]
+    new_conv = xp[:, 1:]
+    y, h = rglru_step(params, xc, state["h"])
+    y = y * jax.nn.gelu(gate)
+    return y @ params["rg_out"], {"conv": new_conv, "h": h}

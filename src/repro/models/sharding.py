@@ -1,0 +1,194 @@
+"""GSPMD sharding rules: logical axes -> mesh axes (MaxText-style).
+
+Logical axes used by param/activation annotations:
+  'fsdp'   — parameter sharding axis (ZeRO-3); maps to 'data' (+'pod' for
+             the >=400B archs on the multi-pod mesh, see DESIGN §6)
+  'tp'     — tensor-parallel axis: heads / ff / experts / vocab -> 'model'
+  'dp'     — batch axis: ('pod','data') when the mesh has a pod axis
+  'sp'     — sequence axis (long-context decode state) -> 'data'
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+REPLICATE_KV_NAMES = frozenset({"wk", "wv", "bk", "bv"})
+
+
+class Rules:
+    def __init__(
+        self, mesh: Mesh, fsdp_over_pod: bool = False,
+        replicate_kv: bool = False,
+    ):
+        # names whose misfit axes are dropped (replicated) instead of being
+        # moved to another dim (avoids row-parallel KV all-reduces)
+        self.no_reassign = REPLICATE_KV_NAMES if replicate_kv else frozenset()
+        self._init_axes(mesh, fsdp_over_pod)
+
+    def _init_axes(self, mesh: Mesh, fsdp_over_pod: bool):
+        names = mesh.axis_names
+        self.has_pod = "pod" in names
+        self.dp = ("pod", "data") if self.has_pod else ("data",)
+        self.fsdp = (
+            ("pod", "data") if (self.has_pod and fsdp_over_pod) else ("data",)
+        )
+        self.tp = "model"
+        self.sp = "data"
+        self.mesh = mesh
+
+    def spec(self, *logical) -> P:
+        out = []
+        for ax in logical:
+            if ax is None:
+                out.append(None)
+            elif ax == "fsdp":
+                if not self.fsdp:          # ZeRO-1 mode: params not sharded
+                    out.append(None)
+                else:
+                    out.append(
+                        self.fsdp if len(self.fsdp) > 1 else self.fsdp[0]
+                    )
+            elif ax == "dp":
+                out.append(self.dp if len(self.dp) > 1 else self.dp[0])
+            elif ax == "tp":
+                out.append(self.tp)
+            elif ax == "sp":
+                out.append(self.sp)
+            else:
+                raise ValueError(f"unknown logical axis {ax}")
+        return P(*out)
+
+    def shard(self, x, *logical):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*logical))
+        )
+
+
+# ---------------------------------------------------------------- param rules
+# Param-name suffix -> logical axes for its trailing dims. When a param is
+# scan-stacked it has a leading layer dim, padded with None automatically.
+PARAM_RULES: dict[str, tuple] = {
+    "embed": ("tp", "fsdp"),          # (V, d)
+    "unembed": ("fsdp", "tp"),        # (d, V)
+    "pos_embed": (None, "fsdp"),      # (T, d)
+    "in_proj_frontend": (None, "fsdp"),
+    "wq": ("fsdp", "tp", None),       # (d, H, hd)
+    "wk": ("fsdp", "tp", None),       # (d, KvH, hd)
+    "wv": ("fsdp", "tp", None),
+    "wo": ("tp", None, "fsdp"),       # (H, hd, d)
+    "bq": ("tp", None),               # (H, hd)
+    "bk": ("tp", None),
+    "bv": ("tp", None),
+    "w_gate": ("fsdp", "tp"),         # (d, ff)
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),         # (ff, d)
+    "router": ("fsdp", "tp"),         # (d, E)
+    "we_gate": ("tp", "fsdp", None),  # (E, d, ff) — experts over 'model'
+    "we_up": ("tp", "fsdp", None),
+    "we_down": ("tp", None, "fsdp"),  # (E, ff, d)
+    "scale": (None,),                 # norms
+    "scale2": (None,),
+    "scale3": (None,),
+    "scale4": (None,),
+    # ssm (mamba2)
+    "ssm_in": ("fsdp", "tp"),         # (d, 2*din + 2*n + heads)
+    "ssm_out": ("tp", "fsdp"),        # (din, d)
+    "conv_w": (None, "tp"),           # (width, din + 2n)
+    "conv_b": ("tp",),
+    "A_log": ("tp",),                 # (heads,)
+    "D": ("tp",),
+    "dt_bias": ("tp",),
+    "ssm_norm": ("tp",),
+    # rg-lru (recurrentgemma)
+    "rg_in": ("fsdp", "tp"),          # (d, 2w)
+    "rg_out": ("tp", "fsdp"),         # (w, d)
+    "rg_conv_w": (None, "tp"),
+    "rg_conv_b": ("tp",),
+    "rg_a_param": ("tp",),            # (w,)
+    "rg_gate_in": ("fsdp", "tp"),     # (d, 2w) input+recurrence gates... (w,2)
+    "rg_wa": ("tp",),                 # (w,) gates
+    "rg_wx": ("tp",),
+}
+
+
+def fix_spec(spec: P, shape, mesh: Mesh, reassign: bool = True) -> P:
+    """Make a PartitionSpec legal for ``shape``: every dim's sharded size
+    must divide the dim. Axes that don't fit are moved to the rightmost
+    other dim where they do (e.g. vocab 49155 can't split 16-way, so the
+    'model' axis moves to the d_model dim), else dropped (replicated)."""
+    sizes = dict(mesh.shape)
+    entries: list[tuple] = []
+    for e in tuple(spec) + (None,) * (len(shape) - len(tuple(spec))):
+        if e is None:
+            entries.append(())
+        elif isinstance(e, (tuple, list)):
+            entries.append(tuple(e))
+        else:
+            entries.append((e,))
+
+    def factor(axes):
+        f = 1
+        for a in axes:
+            f *= sizes[a]
+        return f
+
+    # only dims the rule already shards may receive reassigned axes: never
+    # spill onto a scan/layer dim or head_dim (provokes involuntary SPMD
+    # rematerialization around RoPE/GQA reshapes).
+    candidates = [i for i, e in enumerate(entries) if e] if reassign else []
+    dropped: list[str] = []
+    for i, dim in enumerate(shape):
+        keep: list[str] = []
+        for a in entries[i]:
+            if dim % (factor(keep) * sizes[a]) == 0:
+                keep.append(a)
+            else:
+                dropped.append(a)
+        entries[i] = tuple(keep)
+    for a in dropped:
+        # left-to-right: prefer moving a misfit axis onto a leading (d_model
+        # / row) dim — row-parallel layouts keep downstream reshapes shardable.
+        for i in candidates:
+            if a in entries[i]:
+                continue
+            if shape[i] % (factor(entries[i]) * sizes[a]) == 0:
+                entries[i] = entries[i] + (a,)
+                break
+        # unplaced axes are simply dropped (replicated)
+    out = tuple(
+        None if not e else (e[0] if len(e) == 1 else e) for e in entries
+    )
+    return P(*out)
+
+
+def param_specs(params, rules: Rules):
+    """Build a PartitionSpec tree matching ``params`` by leaf name."""
+
+    def leaf_spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            key = getattr(p, "key", None) or getattr(p, "name", None)
+            if isinstance(key, str):
+                name = key
+                break
+        if name not in PARAM_RULES:
+            raise KeyError(f"no sharding rule for param '{name}' ({path})")
+        logical = PARAM_RULES[name]
+        shape = tuple(leaf.shape)
+        ndim = len(shape)
+        pad = ndim - len(logical)
+        assert pad >= 0, f"{name}: rule longer than rank {ndim}"
+        spec = rules.spec(*((None,) * pad + tuple(logical)))
+        return fix_spec(
+            spec, shape, rules.mesh,
+            reassign=name not in getattr(rules, "no_reassign", frozenset()),
+        )
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(params, rules: Rules):
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), param_specs(params, rules)
+    )

@@ -1,0 +1,185 @@
+"""Mamba-2 (SSD — state-space duality) layer: chunked scan for training /
+prefill, O(1) recurrent state for decode. Follows the "minimal SSD"
+formulation of arXiv:2405.21060 §6 with multi-head x, shared (B, C) per
+group (ngroups=1 here, as in mamba2-370m).
+
+Shapes: d_inner = expand * d_model; heads = d_inner / head_dim; state = N.
+The chunked algorithm computes, per chunk of length Q:
+  intra-chunk (quadratic in Q) + inter-chunk via the running state,
+giving O(T*Q) work and O(1)-in-T memory — which is also why the arch keeps
+the ``long_500k`` decode cell runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+
+
+def init_ssm(key, cfg, dtype):
+    d = cfg.d_model
+    din = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = din + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj packs [z (din) | x (din) | B (n) | C (n) | dt (h)]
+        "ssm_in": dense_init(ks[0], (d, 2 * din + 2 * n + h), 0, dtype),
+        "ssm_out": dense_init(ks[1], (din, d), 0, dtype) / (2 * cfg.num_layers) ** 0.5,
+        "conv_w": dense_init(ks[2], (cfg.conv_width, conv_dim), 0, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "ssm_norm": jnp.ones((din,), dtype),
+    }
+
+
+def _split_proj(params, u, cfg):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = u @ params["ssm_in"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(params, xbc, conv_state=None):
+    """Depthwise causal conv over time. xbc: (B, T, conv_dim)."""
+    w = params["conv_w"]                        # (W, conv_dim)
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state                        # (B, W-1, conv_dim)
+    xp = jnp.concatenate([pad, xbc], axis=1)    # (B, T+W-1, conv_dim)
+    out = sum(
+        xp[:, i : i + xbc.shape[1]] * w[i] for i in range(width)
+    ) + params["conv_b"]
+    new_state = xp[:, -(width - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False):
+    """SSD chunked scan.
+
+    x: (b, T, h, p); dt: (b, T, h); A: (h,) negative decay rates;
+    B, C: (b, T, n). Returns y: (b, T, h, p), final_state: (b, h, p, n).
+    """
+    b, T, h, p = x.shape
+    n = B.shape[-1]
+    pad = -T % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+    xs = x.reshape(b, nc, chunk, h, p)
+    dts = dt.reshape(b, nc, chunk, h)
+    Bs = B.reshape(b, nc, chunk, n)
+    Cs = C.reshape(b, nc, chunk, n)
+
+    dA = dts * A[None, None, None, :]            # (b, nc, Q, h)  (negative)
+    cum = jnp.cumsum(dA, axis=2)                 # within-chunk cumulative
+
+    def chunk_step(state, inp):
+        xs_c, dts_c, Bs_c, Cs_c, dA_c, cum_c = inp   # leading dim b
+        # intra-chunk (quadratic): L[i,j] = exp(cum_i - cum_j) for i >= j
+        li = cum_c[:, :, None, :] - cum_c[:, None, :, :]      # (b, Q, Q, h)
+        iota = jnp.arange(cum_c.shape[1])
+        causal = iota[:, None] >= iota[None, :]
+        L = jnp.where(causal[None, :, :, None], jnp.exp(li), 0.0)
+        G = jnp.einsum("bqn,bkn->bqk", Cs_c, Bs_c)            # (b, Q, Q)
+        M = G[..., None] * L                                   # (b, Q, Q, h)
+        y_intra = jnp.einsum(
+            "bqkh,bkh,bkhp->bqhp", M, dts_c, xs_c,
+            preferred_element_type=jnp.float32,
+        )
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum(
+            "bqn,bhpn,bqh->bqhp", Cs_c, state, jnp.exp(cum_c),
+            preferred_element_type=jnp.float32,
+        )
+        # state update: decay full chunk, add this chunk's outer products
+        decay_chunk = jnp.exp(cum_c[:, -1])                    # (b, h)
+        w = jnp.exp(cum_c[:, -1:, :] - cum_c)                  # (b, Q, h)
+        state_new = state * decay_chunk[:, :, None, None] + jnp.einsum(
+            "bqh,bqn,bqhp->bhpn", w * dts_c, Bs_c, xs_c,
+            preferred_element_type=jnp.float32,
+        )
+        return state_new, (y_intra + y_inter).astype(x.dtype)
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    inputs = (
+        xs.transpose(1, 0, 2, 3, 4),
+        dts.transpose(1, 0, 2, 3),
+        Bs.transpose(1, 0, 2, 3),
+        Cs.transpose(1, 0, 2, 3),
+        dA.transpose(1, 0, 2, 3),
+        cum.transpose(1, 0, 2, 3),
+    )
+    final_state, ys = lax.scan(chunk_step, state0, inputs, unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, Tp, h, p)[:, :T]
+    return y, final_state
+
+
+def ssm_forward(params, u, cfg, state=None):
+    """Full mamba2 mixer. u: (B, T, d_model).
+
+    state: None (train/prefill from scratch) or dict with 'conv' and 'ssd'
+    for streaming prefill. Returns (out, new_state).
+    """
+    din, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(params, u, cfg)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(params, xbc, conv_state)
+    x, B, C = jnp.split(xbc, [din, din + n], axis=-1)
+    bsz, T = u.shape[0], u.shape[1]
+    x = x.reshape(bsz, T, h, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, ssd_state = ssd_chunked(
+        x, dt, A, B, C, cfg.ssm_chunk, unroll=cfg.unroll_loops
+    )
+    y = y + x * params["D"][None, None, :, None]
+    y = y.reshape(bsz, T, din)
+    y = y * jax.nn.silu(z)
+    y = y * jax.lax.rsqrt(
+        jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True) + 1e-6
+    ).astype(y.dtype) * params["ssm_norm"]
+    out = y @ params["ssm_out"]
+    return out, {"conv": new_conv, "ssd": ssd_state}
+
+
+def ssm_decode_step(params, u1, cfg, state):
+    """One-token recurrent step. u1: (B, d_model); state from prefill."""
+    din, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(params, u1[:, None, :], cfg)
+    z, xbc, dt = z[:, 0], xbc[:, 0], dt[:, 0]
+    # conv ring update
+    conv = state["conv"]                         # (B, W-1, conv_dim)
+    w = params["conv_w"]
+    xp = jnp.concatenate([conv, xbc[:, None, :]], axis=1)  # (B, W, conv)
+    out = (xp * w[None]).sum(1) + params["conv_b"]
+    xbc1 = jax.nn.silu(out)
+    new_conv = xp[:, 1:]
+    x, B, C = jnp.split(xbc1, [din, din + n], axis=-1)
+    x = x.reshape(-1, h, p)
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, h)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt1 * A[None, :])               # (B, h)
+    s = state["ssd"]                             # (B, h, p, n)
+    s = s * dA[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt1, B, x, preferred_element_type=jnp.float32
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C, s, preferred_element_type=jnp.float32)
+    y = y + x * params["D"][None, :, None]
+    y = y.reshape(-1, din).astype(u1.dtype)
+    y = y * jax.nn.silu(z)
+    y = y * jax.lax.rsqrt(
+        jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True) + 1e-6
+    ).astype(y.dtype) * params["ssm_norm"]
+    return y @ params["ssm_out"], {"conv": new_conv, "ssd": s}

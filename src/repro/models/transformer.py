@@ -1,0 +1,498 @@
+"""Composable LM assembled from an ArchConfig.
+
+One module covers the whole assigned zoo:
+  dense / moe (+ dense_residual)  : pre-norm attention + (MLP | MoE)
+  ssm                             : mamba2 mixer blocks (attention-free)
+  hybrid                          : Griffin pattern (rec, rec, attn) blocks
+  audio                           : encoder-only, inputs are frame embeddings
+  vlm                             : dense + M-RoPE (+ stubbed patch embeds)
+
+Layers are scan-stacked (HLO O(1) in depth) and rematerialized per the
+config policy. Three entry points: ``forward_train`` (logits + aux),
+``prefill`` (logits at last position + cache), ``decode_step`` (one token).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    attention_out,
+    attention_qkv,
+    blockwise_attention,
+    decode_attention,
+    dense_init,
+    gated_mlp,
+    init_attention,
+    init_mlp,
+    rms_norm,
+)
+
+FRONTEND_DIM = 512  # stubbed modality frontends emit this width
+
+
+# ------------------------------------------------------------------ params --
+def _init_dense_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "scale": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "scale2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        if cfg.dense_residual:
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype, cfg.num_layers)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype, cfg.num_layers)
+    return p
+
+
+def _init_ssm_layer(key, cfg, dtype):
+    return {
+        "scale": jnp.ones((cfg.d_model,), dtype),
+        "ssm": ssm_mod.init_ssm(key, cfg, dtype),
+    }
+
+
+def _init_rec_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "scale": jnp.ones((cfg.d_model,), dtype),
+        "rec": rg_mod.init_rglru(ks[0], cfg, dtype),
+        "scale2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype, cfg.num_layers),
+    }
+
+
+def _layer_initializer(kind: str):
+    return {
+        "dense": _init_dense_layer,
+        "ssm": _init_ssm_layer,
+        "rec": _init_rec_layer,
+        "attn": _init_dense_layer,
+    }[kind]
+
+
+def hybrid_layout(cfg: ArchConfig) -> tuple[int, tuple[str, ...], tuple[str, ...]]:
+    """(#full blocks, block pattern, tail pattern) covering num_layers."""
+    pat = cfg.block_pattern
+    nb = (cfg.num_layers - len(cfg.tail_pattern)) // len(pat)
+    used = nb * len(pat) + len(cfg.tail_pattern)
+    assert used == cfg.num_layers, (used, cfg.num_layers)
+    return nb, pat, cfg.tail_pattern
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {"final": {"scale": jnp.ones((cfg.d_model,), dtype)}}
+    vpad = cfg.padded_vocab
+    if cfg.embed_inputs:
+        params["embed"] = dense_init(keys[0], (vpad, cfg.d_model), 1, dtype)
+    else:
+        params["in_proj_frontend"] = dense_init(
+            keys[0], (FRONTEND_DIM, cfg.d_model), 0, dtype
+        )
+    if not cfg.tie_embeddings or not cfg.embed_inputs:
+        params["unembed"] = dense_init(
+            keys[1], (cfg.d_model, vpad), 0, dtype
+        )
+
+    if cfg.family == "hybrid":
+        nb, pat, tail = hybrid_layout(cfg)
+        blocks = {}
+        for i, kind in enumerate(pat):
+            lkeys = jax.random.split(jax.random.fold_in(keys[2], i), nb)
+            blocks[f"pos{i}_{kind}"] = jax.vmap(
+                lambda k: _layer_initializer(kind)(k, cfg, dtype)
+            )(lkeys)
+        params["blocks"] = blocks
+        params["tail"] = {
+            f"tail{i}_{kind}": _layer_initializer(kind)(
+                jax.random.fold_in(keys[3], i), cfg, dtype
+            )
+            for i, kind in enumerate(tail)
+        }
+    else:
+        kind = "ssm" if cfg.family == "ssm" else "dense"
+        lkeys = jax.random.split(keys[2], cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _layer_initializer(kind)(k, cfg, dtype)
+        )(lkeys)
+    return params
+
+
+# ------------------------------------------------------------- layer fns ----
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        # save only batch-free dot outputs: keeps weight-stationary matmul
+        # results but NOT attention-score tensors (which scale with T^2 and
+        # would be stacked across the layer scan).
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    return jax.checkpoint(fn)
+
+
+def _cast_layer_params(p, cfg):
+    """Compute-dtype cast (bf16 activations lever, §Perf): router stays f32
+    for routing numerics; everything else follows activation_dtype."""
+    act = jnp.dtype(cfg.activation_dtype)
+
+    def cast(path, w):
+        name = ""
+        for q in reversed(path):
+            k = getattr(q, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        if name == "router" or not jnp.issubdtype(w.dtype, jnp.floating):
+            return w
+        return w.astype(act)
+
+    if act == jnp.dtype(cfg.param_dtype):
+        return p
+    return jax.tree_util.tree_map_with_path(cast, p)
+
+
+def _dense_layer_fwd(p, x, cfg, positions, positions3):
+    p = _cast_layer_params(p, cfg)
+    xn = rms_norm(x, p["scale"], cfg.norm_eps)
+    q, k, v = attention_qkv(p["attn"], xn, cfg, positions, positions3)
+    window = cfg.window if cfg.family == "hybrid" else 0
+    if cfg.attn_pairs and cfg.causal:
+        from repro.models.layers import pairscan_attention
+
+        attn = pairscan_attention(
+            q, k, v, causal=True, window=window,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            unroll=cfg.unroll_loops,
+        )
+    else:
+        attn = blockwise_attention(
+            q, k, v, causal=cfg.causal, window=window,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            fwd_only=cfg.attn_fwd_only, unroll=cfg.unroll_loops,
+        )
+    x = x + attention_out(p["attn"], attn)
+    xn2 = rms_norm(x, p["scale2"], cfg.norm_eps)
+    if cfg.family == "moe" and "moe" in p:
+        ff = moe_mod.moe_layer(p["moe"], xn2, cfg)
+        aux = moe_mod.moe_aux_loss(p["moe"], xn2, cfg)
+        if cfg.dense_residual:
+            ff = ff + gated_mlp(p["mlp"], xn2)
+    else:
+        ff = gated_mlp(p["mlp"], xn2)
+        aux = jnp.float32(0.0)
+    return x + ff, aux
+
+
+def _ssm_layer_fwd(p, x, cfg):
+    p = _cast_layer_params(p, cfg)
+    xn = rms_norm(x, p["scale"], cfg.norm_eps)
+    out, _ = ssm_mod.ssm_forward(p["ssm"], xn, cfg)
+    return x + out, jnp.float32(0.0)
+
+
+def _rec_layer_fwd(p, x, cfg):
+    p = _cast_layer_params(p, cfg)
+    xn = rms_norm(x, p["scale"], cfg.norm_eps)
+    out, _ = rg_mod.recurrent_block(p["rec"], xn, cfg)
+    x = x + out
+    xn2 = rms_norm(x, p["scale2"], cfg.norm_eps)
+    return x + gated_mlp(p["mlp"], xn2), jnp.float32(0.0)
+
+
+# ------------------------------------------------------------ forward (train)
+def embed_inputs(params, batch, cfg: ArchConfig):
+    if cfg.embed_inputs:
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeds"].astype(params["in_proj_frontend"].dtype) \
+            @ params["in_proj_frontend"]
+    return x.astype(jnp.dtype(cfg.activation_dtype))
+
+
+def unembed(params, x, cfg: ArchConfig):
+    logits = x @ params["unembed"] if "unembed" in params else x @ params["embed"].T
+    if cfg.padded_vocab != cfg.vocab_size:
+        cols = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(cols < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def forward_train(params, batch, cfg: ArchConfig, rules=None):
+    """batch: tokens (B,T) [or embeds (B,T,F)], positions (B,T),
+    optional positions3 (3,B,T). Returns (logits, aux_loss).
+
+    ``rules`` (models.sharding.Rules) pins activation shardings: batch over
+    'dp' at the embed output and at every layer boundary — without these,
+    GSPMD can resolve the embed-gather sharding conflict by replicating the
+    batch (observed: 3.5x per-device live memory on the dry-run)."""
+    constrain = (
+        (lambda t: rules.shard(t, "dp", None, None)) if rules is not None
+        else (lambda t: t)
+    )
+    from repro.models.context import use_rules
+
+    with use_rules(rules):
+        return _forward_train_body(params, batch, cfg, constrain)
+
+
+def _forward_train_body(params, batch, cfg: ArchConfig, constrain):
+    x = constrain(embed_inputs(params, batch, cfg))
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1])[None], x.shape[:2]
+        )
+    positions3 = batch.get("positions3")
+
+    if cfg.family == "hybrid":
+        nb, pat, tail = hybrid_layout(cfg)
+
+        def block_fwd(x, block_params):
+            aux = jnp.float32(0.0)
+            for i, kind in enumerate(pat):
+                p = block_params[f"pos{i}_{kind}"]
+                if kind == "rec":
+                    x, a = _rec_layer_fwd(p, x, cfg)
+                else:
+                    x, a = _dense_layer_fwd(p, x, cfg, positions, positions3)
+                aux = aux + a
+            return x, aux
+
+        body = _remat(block_fwd, cfg)
+        x, auxs = lax.scan(
+            lambda c, p: (lambda y, a: (constrain(y), a))(*body(c, p)),
+            x, params["blocks"], unroll=cfg.unroll_loops,
+        )
+        aux = auxs.sum()
+        for name, p in params["tail"].items():
+            kind = name.split("_")[-1]
+            if kind == "rec":
+                x, a = _rec_layer_fwd(p, x, cfg)
+            else:
+                x, a = _dense_layer_fwd(p, x, cfg, positions, positions3)
+            aux = aux + a
+    else:
+        if cfg.family == "ssm":
+            layer = lambda p, x: _ssm_layer_fwd(p, x, cfg)
+        else:
+            layer = lambda p, x: _dense_layer_fwd(p, x, cfg, positions, positions3)
+        body = _remat(lambda x, p: layer(p, x), cfg)
+        x, auxs = lax.scan(
+            lambda c, p: (lambda y, a: (constrain(y), a))(*body(c, p)),
+            x, params["layers"], unroll=cfg.unroll_loops,
+        )
+        aux = auxs.sum()
+
+    x = rms_norm(x, params["final"]["scale"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig, aux_weight: float = 0.01, rules=None):
+    logits, aux = forward_train(params, batch, cfg, rules=rules)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    nll = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll + aux_weight * aux, (nll, aux)
+
+
+# --------------------------------------------------------------- serving ----
+def _attn_cache_shape(cfg, batch, max_len):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), jnp.bfloat16),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, hd), jnp.bfloat16),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Empty per-layer cache pytree (stacked over scan where applicable)."""
+    cache_len = min(max_len, cfg.window) if (
+        cfg.family == "hybrid" and cfg.window
+    ) else max_len
+
+    def attn_c():
+        return _attn_cache_shape(cfg, batch, max_len if cfg.family != "hybrid" else cache_len)
+
+    def ssm_c():
+        din, n = cfg.d_inner, cfg.ssm_state
+        return {
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, din + 2 * n), jnp.float32),
+            "ssd": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+        }
+
+    def rec_c():
+        w = cfg.rnn_width or cfg.d_model
+        return {
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+            "h": jnp.zeros((batch, w), jnp.float32),
+        }
+
+    if cfg.family == "hybrid":
+        nb, pat, tail = hybrid_layout(cfg)
+        stack = lambda mk: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (nb, *a.shape)), mk()
+        )
+        blocks = {
+            f"pos{i}_{kind}": stack(rec_c if kind == "rec" else attn_c)
+            for i, kind in enumerate(pat)
+        }
+        tail_c = {
+            f"tail{i}_{kind}": (rec_c if kind == "rec" else attn_c)()
+            for i, kind in enumerate(tail)
+        }
+        return {"blocks": blocks, "tail": tail_c}
+    if cfg.family == "ssm":
+        one = ssm_c()
+        return {
+            "layers": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), one
+            )
+        }
+    one = attn_c()
+    return {
+        "layers": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), one
+        )
+    }
+
+
+def _attn_decode(p, x1, cache, pos, cfg, positions3=None):
+    """x1: (B, d); cache {'k','v'}: (B, S, KvH, hd); pos: () int32."""
+    xn = rms_norm(x1[:, None, :], p["scale"], cfg.norm_eps)
+    posb = jnp.broadcast_to(jnp.asarray(pos)[None, None], (x1.shape[0], 1))
+    q, k, v = attention_qkv(p["attn"], xn, cfg, posb, positions3)
+    S = cache["k"].shape[1]
+    if cfg.family == "hybrid" and cfg.window:
+        write = jnp.mod(pos, S)
+    else:
+        write = pos
+    kc = cache["k"].at[:, write].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[:, write].set(v[:, 0].astype(cache["v"].dtype))
+    if cfg.family == "hybrid" and cfg.window:
+        clen = jnp.minimum(pos + 1, S)
+        win = 0  # ring buffer already bounds the window
+    else:
+        clen = pos + 1
+        win = 0
+    attn = decode_attention(q[:, 0], kc, vc, clen, window=win)
+    out = attention_out(p["attn"], attn[:, None])[:, 0]
+    x1 = x1 + out
+    xn2 = rms_norm(x1[:, None, :], p["scale2"], cfg.norm_eps)[:, 0]
+    if cfg.family == "moe" and "moe" in p:
+        ff = moe_mod.moe_layer(p["moe"], xn2[:, None, :], cfg)[:, 0]
+        if cfg.dense_residual:
+            ff = ff + gated_mlp(p["mlp"], xn2)
+    else:
+        ff = gated_mlp(p["mlp"], xn2)
+    return x1 + ff, {"k": kc, "v": vc}
+
+
+def _ssm_decode(p, x1, cache, cfg):
+    xn = rms_norm(x1[:, None, :], p["scale"], cfg.norm_eps)[:, 0]
+    out, new = ssm_mod.ssm_decode_step(p["ssm"], xn, cfg, cache)
+    return x1 + out, new
+
+
+def _rec_decode(p, x1, cache, cfg):
+    xn = rms_norm(x1[:, None, :], p["scale"], cfg.norm_eps)[:, 0]
+    out, new = rg_mod.recurrent_block_step(p["rec"], xn, cfg, cache)
+    x1 = x1 + out
+    xn2 = rms_norm(x1[:, None, :], p["scale2"], cfg.norm_eps)[:, 0]
+    return x1 + gated_mlp(p["mlp"], xn2), new
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig, positions3=None):
+    """One serving step: token (B,) int32 at position pos () int32.
+
+    Returns (logits (B, V), new_cache). This is what ``decode_*`` /
+    ``long_*`` shapes lower (serve_step), with the cache as input specs.
+    """
+    x1 = params["embed"][token] if cfg.embed_inputs else token  # (B, d)
+
+    if cfg.family == "hybrid":
+        nb, pat, tail = hybrid_layout(cfg)
+
+        def block_step(x1, inp):
+            bp, bc = inp
+            new_c = {}
+            for i, kind in enumerate(pat):
+                key = f"pos{i}_{kind}"
+                if kind == "rec":
+                    x1, nc = _rec_decode(bp[key], x1, bc[key], cfg)
+                else:
+                    x1, nc = _attn_decode(bp[key], x1, bc[key], pos, cfg, positions3)
+                new_c[key] = nc
+            return x1, new_c
+
+        x1, new_blocks = lax.scan(
+            block_step, x1, (params["blocks"], cache["blocks"]),
+            unroll=cfg.unroll_loops,
+        )
+        new_tail = {}
+        for name, p in params["tail"].items():
+            kind = name.split("_")[-1]
+            if kind == "rec":
+                x1, nc = _rec_decode(p, x1, cache["tail"][name], cfg)
+            else:
+                x1, nc = _attn_decode(p, x1, cache["tail"][name], pos, cfg, positions3)
+            new_tail[name] = nc
+        new_cache = {"blocks": new_blocks, "tail": new_tail}
+    elif cfg.family == "ssm":
+        def step(x1, inp):
+            p, c = inp
+            return _ssm_decode(p, x1, c, cfg)
+
+        x1, new_layers = lax.scan(
+            step, x1, (params["layers"], cache["layers"]), unroll=cfg.unroll_loops
+        )
+        new_cache = {"layers": new_layers}
+    else:
+        def step(x1, inp):
+            p, c = inp
+            return _attn_decode(p, x1, c, pos, cfg, positions3)
+
+        x1, new_layers = lax.scan(
+            step, x1, (params["layers"], cache["layers"]), unroll=cfg.unroll_loops
+        )
+        new_cache = {"layers": new_layers}
+
+    x1 = rms_norm(x1, params["final"]["scale"], cfg.norm_eps)
+    logits = unembed(params, x1, cfg)
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int):
+    """Run the full prompt, build a cache, return last-position logits.
+
+    For the ``prefill_32k`` cells we lower the *training-style* forward (no
+    cache write) when the arch is encoder-only, else this function.
+    """
+    tokens = batch["tokens"] if cfg.embed_inputs else batch["embeds"]
+    B, T = tokens.shape[0], tokens.shape[1]
+    logits, _ = forward_train(params, batch, cfg)
+    cache = init_cache(cfg, B, max_len)
+    # NOTE: for attention archs the cache would be written during the layer
+    # pass in a fused implementation; the dry-run cost of the extra pass is
+    # avoided by lowering forward_train for prefill cells (see launch/dryrun).
+    return logits[:, -1], cache

@@ -1,0 +1,7 @@
+from repro.optim.adafactor import Adafactor, AdafactorState, make_optimizer
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+
+__all__ = [
+    "Adafactor", "AdafactorState", "AdamW", "AdamWState",
+    "global_norm", "make_optimizer",
+]

@@ -1,0 +1,111 @@
+"""Adafactor (Shazeer & Stern 2018) with factored second moments and no
+first moment — the optimizer-state footprint that lets the 480B/1T archs
+fit 16 GB/chip HBM (DESIGN §6): state is O(rows + cols) per matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: dict   # row second moments (or full v for rank<2 leaves)
+    vc: dict   # col second moments (zeros for rank<2 leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: float = 1e-3
+    decay: float = 0.8       # beta2_t = 1 - step^-decay
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+
+    def _factored(self, x) -> bool:
+        return x.ndim >= 2
+
+    def init(self, params) -> AdafactorState:
+        def vr(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)   # reduce last dim
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree.map(vr, params),
+            vc=jax.tree.map(vc, params),
+        )
+
+    def update(self, grads, state: AdafactorState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-self.decay)
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps1
+            if self._factored(p):
+                vr2 = beta2 * vr + (1 - beta2) * g2.mean(-1)
+                vc2 = beta2 * vc + (1 - beta2) * g2.mean(-2)
+                denom = vr2.mean(-1, keepdims=True)[..., None]
+                vhat = (vr2[..., None] * vc2[..., None, :]) / jnp.maximum(
+                    denom, self.eps1
+                )
+                u = g * jax.lax.rsqrt(jnp.maximum(vhat, self.eps1))
+            else:
+                vr2 = beta2 * vr + (1 - beta2) * g2
+                vc2 = vc
+                u = g * jax.lax.rsqrt(jnp.maximum(vr2, self.eps1))
+            # update clipping (RMS-based)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + self.eps1)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            scale = jnp.maximum(
+                self.eps2, jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32))))
+            )
+            new_p = p.astype(jnp.float32) - self.lr * scale * u
+            return new_p.astype(p.dtype), vr2, vc2
+
+        def upd_leaf(p, g, vr, vc):
+            # scan-stacked leaves (leading layer dim) update layer-by-layer:
+            # bounds the f32 transients (g^2, vhat, u) to one layer's slice
+            # instead of the whole stack (observed: ~20 GiB at 1T params).
+            if p.ndim >= 3 and p.shape[0] > 1:
+                def body(_, args):
+                    out = upd(*args)
+                    return None, out
+
+                _, (np_, nvr, nvc) = jax.lax.scan(body, None, (p, g, vr, vc))
+                return np_, nvr, nvc
+            return upd(p, g, vr, vc)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_vr = tdef.flatten_up_to(state.vr)
+        flat_vc = tdef.flatten_up_to(state.vc)
+        out = [upd_leaf(p, g, vr, vc) for p, g, vr, vc in zip(flat_p, flat_g, flat_vr, flat_vc)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_vr = tdef.unflatten([o[1] for o in out])
+        new_vc = tdef.unflatten([o[2] for o in out])
+        from repro.optim.adamw import global_norm
+
+        return new_params, AdafactorState(step, new_vr, new_vc), global_norm(grads)
+
+
+def make_optimizer(name: str, lr: float | None = None):
+    if name == "adamw":
+        return AdamW(lr=lr or 3e-4)
+    if name == "adafactor":
+        return Adafactor(lr=lr or 1e-3)
+    raise ValueError(name)
+
+
+from repro.optim.adamw import AdamW  # noqa: E402  (factory above)

@@ -1,0 +1,56 @@
+"""AdamW as a pure pytree transform (no external deps)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p
+        )
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(params), v=zeros(params))
+
+    def update(self, grads, state: AdamWState, params):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        step = state.step + 1
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state.m, grads)
+        v = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state.v, grads)
+
+        def upd(p, m, v):
+            mh, vh = m / b1c, v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v), gnorm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )

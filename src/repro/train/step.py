@@ -1,0 +1,212 @@
+"""train_step / serve_step builders.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function with:
+  * microbatch gradient accumulation (lax.scan) — bounds live activation
+    memory AND lets XLA overlap each microbatch's reduce-scatters with the
+    next microbatch's compute (DESIGN §6 'overlap');
+  * configurable accumulation dtype (bf16 = compressed cross-replica
+    reduction payload);
+  * activation sharding constraints on batch entry (GSPMD propagates the
+    rest from the param shardings in models.sharding.PARAM_RULES).
+
+``make_serve_step`` returns the decode-one-token function the ``decode_*``
+and ``long_*`` shapes lower.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.sharding import Rules
+from repro.optim import make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt_state: object
+    step: jnp.ndarray
+
+
+def init_train_state(cfg: ArchConfig, key, lr: float | None = None) -> TrainState:
+    params = tf.init_params(cfg, key)
+    opt = make_optimizer(cfg.optimizer, lr)
+    return TrainState(
+        params=params, opt_state=opt.init(params), step=jnp.zeros((), jnp.int32)
+    )
+
+
+def _shard_batch(batch: dict, rules: Rules | None) -> dict:
+    if rules is None:
+        return batch
+    out = {}
+    for k, v in batch.items():
+        if k == "positions3":
+            out[k] = rules.shard(v, None, "dp", None)
+        elif v.ndim >= 2:
+            out[k] = rules.shard(v, "dp", *([None] * (v.ndim - 1)))
+        else:
+            out[k] = v
+    return out
+
+
+def effective_microbatches(shape: ShapeConfig, rules: Rules | None) -> int:
+    """Per-microbatch batch must stay divisible by the dp degree, or GSPMD
+    pads and part of the mesh idles (observed on the 2-pod mesh)."""
+    num_mb = shape.num_microbatches
+    if rules is None:
+        return num_mb
+    import numpy as _np
+
+    dp_size = int(_np.prod([rules.mesh.shape[a] for a in rules.dp]))
+    while num_mb > 1 and (shape.global_batch // num_mb) % dp_size != 0:
+        num_mb //= 2
+    return num_mb
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    shape: ShapeConfig | None = None,
+    rules: Rules | None = None,
+    *,
+    accum_dtype=None,
+    lr: float | None = None,
+    zero1: bool = False,
+):
+    """``zero1``: hoist the FSDP parameter all-gather out of the microbatch
+    loop (ZeRO-1). FSDP re-gathers every weight in every microbatch's fwd
+    AND bwd (~3 x param_bytes x num_microbatches of all-gather per step);
+    ZeRO-1 gathers once, computes all microbatches against the gathered
+    copy (accumulating grads in the gathered layout, bf16), and
+    reduce-scatters once into the fsdp-sharded optimizer. Collective bytes
+    drop ~num_microbatches-fold at the cost of one replicated bf16
+    param+grad copy per device — the §Perf granite iteration."""
+    opt = make_optimizer(cfg.optimizer, lr)
+    num_mb = effective_microbatches(shape, rules) if shape else 1
+    if accum_dtype is None:
+        # bf16 accumulation when params are bf16 (1T arch) or when ZeRO-1
+        # keeps a replicated accumulation copy: halves the accumulate
+        # buffer and the cross-replica reduce payload
+        accum_dtype = (
+            jnp.bfloat16
+            if (cfg.param_dtype == "bfloat16" or zero1)
+            else jnp.float32
+        )
+
+    if zero1 and rules is not None:
+        nofsdp_rules = Rules(rules.mesh)
+        nofsdp_rules.fsdp = ()
+    else:
+        nofsdp_rules = None
+
+    def train_step(state: TrainState, batch: dict):
+        batch = _shard_batch(batch, rules)
+
+        if nofsdp_rules is not None:
+            from repro.models.sharding import param_shardings
+
+            gathered_sh = param_shardings(state.params, nofsdp_rules)
+            compute_params = jax.tree.map(
+                jax.lax.with_sharding_constraint, state.params, gathered_sh
+            )
+        else:
+            compute_params = state.params
+
+        def loss(params, mb):
+            l, (nll, aux) = tf.loss_fn(params, mb, cfg, rules=rules)
+            return l, (nll, aux)
+
+        if num_mb == 1:
+            (l, (nll, aux)), grads = jax.value_and_grad(loss, has_aux=True)(
+                compute_params, batch
+            )
+        else:
+            def split(v, k):
+                # constrain: microbatch dim replicated, batch dim over dp —
+                # otherwise GSPMD may shard the scan (mb) axis and replicate
+                # the per-step batch across the whole mesh.
+                if v.ndim == 0:
+                    return jnp.broadcast_to(v, (num_mb,))
+                if k == "positions3":  # (3, B, T)
+                    b = v.shape[1]
+                    out = v.reshape(
+                        3, num_mb, b // num_mb, *v.shape[2:]
+                    ).transpose(1, 0, *range(2, v.ndim + 1))
+                    if rules is not None:
+                        out = rules.shard(
+                            out, None, None, "dp", *([None] * (out.ndim - 3))
+                        )
+                    return out
+                b = v.shape[0]
+                out = v.reshape(num_mb, b // num_mb, *v.shape[1:])
+                if rules is not None:
+                    out = rules.shard(
+                        out, None, "dp", *([None] * (out.ndim - 2))
+                    )
+                return out
+
+            mbs = {k: split(v, k) for k, v in batch.items()}
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), state.params
+            )
+            if nofsdp_rules is not None:
+                # accumulate in the gathered layout (bf16) — reduce-scatter
+                # happens once, below
+                zero_g = jax.tree.map(
+                    jax.lax.with_sharding_constraint, zero_g, gathered_sh
+                )
+
+            def mb_step(carry, mb):
+                g_acc, l_acc, nll_acc, aux_acc = carry
+                (l, (nll, aux)), g = jax.value_and_grad(loss, has_aux=True)(
+                    compute_params, mb
+                )
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g
+                )
+                return (g_acc, l_acc + l, nll_acc + nll, aux_acc + aux), None
+
+            (grads, l, nll, aux), _ = jax.lax.scan(
+                mb_step, (zero_g, 0.0, 0.0, 0.0), mbs, unroll=cfg.unroll_loops
+            )
+            inv = 1.0 / num_mb
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+            l, nll, aux = l * inv, nll * inv, aux * inv
+
+        if nofsdp_rules is not None:
+            # one reduce-scatter back into the fsdp-sharded optimizer layout
+            from repro.models.sharding import param_shardings
+
+            grads = jax.tree.map(
+                jax.lax.with_sharding_constraint,
+                grads,
+                param_shardings(state.params, rules),
+            )
+
+        new_params, new_opt, gnorm = opt.update(grads, state.opt_state, state.params)
+        metrics = {"loss": l, "nll": nll, "aux": aux, "grad_norm": gnorm}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """decode one token: (params, cache, token, pos[, positions3])."""
+
+    def serve_step(params, cache, token, pos, positions3=None):
+        return tf.decode_step(params, cache, token, pos, cfg, positions3)
+
+    return serve_step
+
+
+def make_prefill(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, aux = tf.forward_train(params, batch, cfg)
+        return logits
+
+    return prefill_step

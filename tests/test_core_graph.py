@@ -1,0 +1,87 @@
+"""Vamana + page-graph construction invariants (Algorithm 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import page_graph as pg
+from repro.core import vamana
+from repro.core.layout import reassign_ids
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((400, 16)).astype(np.float32)
+    nbrs = vamana.build_vamana(x, degree=12, beam=24, seed=0)
+    return x, nbrs
+
+
+def test_vamana_degree_and_no_self_loops(small_graph):
+    x, nbrs = small_graph
+    assert nbrs.shape == (400, 12)
+    for i in range(len(nbrs)):
+        row = nbrs[i][nbrs[i] != pg.PAD]
+        assert i not in row
+        assert len(np.unique(row)) == len(row)
+
+
+def test_vamana_greedy_search_recall(small_graph):
+    x, nbrs = small_graph
+    rng = np.random.default_rng(1)
+    q = x[rng.integers(0, 400, 20)] + 0.01 * rng.standard_normal((20, 16)).astype(np.float32)
+    import jax.numpy as jnp
+
+    ids, d = vamana._greedy_search_batch(
+        jnp.asarray(x), jnp.asarray(nbrs), jnp.asarray(q),
+        vamana.medoid(x), beam=32, iters=24,
+    )
+    truth = vamana.brute_force_knn(x, q, 10)
+    hits = 0
+    for i in range(20):
+        found = set(np.asarray(ids[i]).tolist())
+        hits += len(found & set(truth[i].tolist()))
+    assert hits / (20 * 10) > 0.8
+
+
+def test_grouping_partitions_all_vectors(small_graph):
+    x, nbrs = small_graph
+    g = pg.group_pages(x, nbrs, capacity=8, h=2)
+    flat = g.pages[g.pages != pg.PAD]
+    assert len(flat) == 400
+    assert len(np.unique(flat)) == 400          # exactly-once cover
+    assert (g.page_of >= 0).all()
+    for v in range(400):
+        assert g.pages[g.page_of[v], g.slot_of[v]] == v
+
+
+def test_page_edges_external_and_deduped(small_graph):
+    x, nbrs = small_graph
+    g = pg.group_pages(x, nbrs, capacity=8, h=2)
+    edges = pg.derive_page_edges(x, nbrs, g, page_degree=16)
+    for pid in range(len(edges)):
+        row = edges[pid][edges[pid] != pg.PAD]
+        assert len(np.unique(row)) == len(row)   # merged duplicates
+        assert (g.page_of[row] != pid).all()     # intra-page edges removed
+
+
+def test_reassignment_bijective(small_graph):
+    x, nbrs = small_graph
+    g = pg.group_pages(x, nbrs, capacity=8, h=2)
+    new_to_old, old_to_new = reassign_ids(g)
+    valid = new_to_old != pg.PAD
+    assert valid.sum() == 400
+    assert (old_to_new[new_to_old[valid]] == np.nonzero(valid)[0]).all()
+    # page id arithmetic: new_id // capacity == page_of[old_id]
+    new_ids = old_to_new[np.arange(400)]
+    assert (new_ids // 8 == g.page_of).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(capacity=st.sampled_from([4, 8, 16]), h=st.sampled_from([1, 2, 3]))
+def test_grouping_capacity_respected(capacity, h):
+    rng = np.random.default_rng(capacity * h)
+    x = rng.standard_normal((100, 8)).astype(np.float32)
+    nbrs = vamana.build_vamana(x, degree=8, beam=16, rounds=1, seed=0)
+    g = pg.group_pages(x, nbrs, capacity=capacity, h=h)
+    assert ((g.pages != pg.PAD).sum(1) <= capacity).all()
+    assert g.pages.shape[0] == -(-100 // capacity) or g.pages.shape[0] >= 100 // capacity

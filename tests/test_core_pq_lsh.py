@@ -1,0 +1,78 @@
+"""PQ + LSH component tests (quality + invariants)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lsh as lsh_mod
+from repro.core import pq as pq_mod
+
+
+def test_pq_reconstruction_improves_with_subspaces(rng):
+    x = rng.standard_normal((512, 32)).astype(np.float32)
+    errs = []
+    for m in (2, 8, 16):
+        books = pq_mod.train_pq(x, m, ksub=64, iters=8)
+        codes = pq_mod.pq_encode(jnp.asarray(x), jnp.asarray(books))
+        rec = pq_mod.pq_decode(codes, jnp.asarray(books))
+        errs.append(float(np.square(np.asarray(rec) - x).mean()))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_adc_approximates_exact_distance(rng):
+    x = rng.standard_normal((400, 32)).astype(np.float32)
+    q = rng.standard_normal((32,)).astype(np.float32)
+    books = pq_mod.train_pq(x, 16, ksub=64, iters=10)
+    codes = pq_mod.pq_encode(jnp.asarray(x), jnp.asarray(books))
+    lut = pq_mod.pq_lut(jnp.asarray(q), jnp.asarray(books))
+    est = np.asarray(pq_mod.adc_distance(codes, lut))
+    exact = np.square(x - q).sum(-1)
+    # rank correlation must be strong (that's all the search needs)
+    top_est = set(np.argsort(est)[:40].tolist())
+    top_exact = set(np.argsort(exact)[:40].tolist())
+    assert len(top_est & top_exact) >= 20
+
+
+def test_adc_matches_lut_sum_exactly(rng):
+    books = rng.standard_normal((4, 16, 8)).astype(np.float32)
+    codes = rng.integers(0, 16, (20, 4)).astype(np.uint8)
+    q = rng.standard_normal((32,)).astype(np.float32)
+    lut = pq_mod.pq_lut(jnp.asarray(q), jnp.asarray(books))
+    got = np.asarray(pq_mod.adc_distance(jnp.asarray(codes), lut))
+    want = np.asarray(lut)[np.arange(4)[None], codes.astype(int)].sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([32, 64]), n=st.integers(2, 64))
+def test_pack_bits_hamming_identity(bits, n):
+    rng = np.random.default_rng(n)
+    raw = rng.integers(0, 2, (n, bits)).astype(np.uint32)
+    packed = lsh_mod.pack_bits(jnp.asarray(raw))
+    d = lsh_mod.hamming_distance(packed, packed[0])
+    want = (raw != raw[0]).sum(-1)
+    np.testing.assert_array_equal(np.asarray(d), want)
+
+
+def test_lsh_routes_to_similar_vectors(rng):
+    # clustered data: queries near cluster centers must route to same cluster
+    centers = rng.standard_normal((8, 32)).astype(np.float32)
+    assign = np.repeat(np.arange(8), 64)
+    x = centers[assign] + 0.05 * rng.standard_normal((512, 32)).astype(np.float32)
+    codes = np.zeros((512, 4), np.uint8)
+    idx = lsh_mod.build_lsh(x, codes, bits=64, sample=512, seed=0)
+    hits = 0
+    for c in range(8):
+        q = centers[c] + 0.05 * rng.standard_normal(32).astype(np.float32)
+        ids, _ = idx.query(jnp.asarray(q), top_t=8)
+        got = assign[np.asarray(idx.sample_ids)[np.isin(np.asarray(idx.sample_ids), np.asarray(ids))]]
+        routed = assign[np.asarray(ids)]
+        hits += (routed == c).mean()
+    assert hits / 8 > 0.6
+
+
+def test_lsh_memory_accounting():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((256, 16)).astype(np.float32)
+    codes = np.zeros((256, 8), np.uint8)
+    idx = lsh_mod.build_lsh(x, codes, bits=32, sample=128)
+    assert idx.memory_bytes == 16 * 32 * 4 + 128 * 4 + 128 * 1 * 4 + 128 * 8

@@ -1,0 +1,94 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.hamming import hamming
+from repro.kernels.l2dist import l2_distance
+from repro.kernels.page_gather import page_gather_l2
+from repro.kernels.pq_adc import pq_adc
+
+SET = dict(max_examples=12, deadline=None)
+
+
+@settings(**SET)
+@given(
+    bq=st.integers(1, 70),
+    nx=st.integers(1, 300),
+    d=st.sampled_from([8, 32, 96, 128]),
+    dtype=st.sampled_from([np.float32, np.float16]),
+)
+def test_l2_distance_matches_ref(bq, nx, d, dtype):
+    rng = np.random.default_rng(bq * 1000 + nx)
+    q = jnp.asarray(rng.standard_normal((bq, d)).astype(dtype))
+    x = jnp.asarray(rng.standard_normal((nx, d)).astype(dtype))
+    out = l2_distance(q, x, interpret=True)
+    want = ref.l2_distance_ref(q, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-2, rtol=2e-2)
+
+
+@settings(**SET)
+@given(
+    n=st.integers(1, 600),
+    m=st.sampled_from([4, 8, 16]),
+    k=st.sampled_from([16, 256]),
+)
+def test_pq_adc_matches_ref(n, m, k):
+    rng = np.random.default_rng(n)
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
+    lut = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    out = pq_adc(codes, lut, interpret=True)
+    want = ref.pq_adc_ref(codes, lut)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SET)
+@given(s=st.integers(1, 700), w=st.sampled_from([1, 2, 4]))
+def test_hamming_matches_ref(s, w):
+    rng = np.random.default_rng(s)
+    codes = jnp.asarray(
+        rng.integers(0, 2**32, (s, w), dtype=np.uint64).astype(np.uint32)
+    )
+    qc = jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint64).astype(np.uint32))
+    out = hamming(codes, qc, interpret=True)
+    want = ref.hamming_ref(codes, qc)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_hamming_zero_distance_to_self():
+    codes = jnp.asarray(np.arange(8, dtype=np.uint32).reshape(4, 2))
+    out = hamming(codes, codes[2], interpret=True)
+    assert int(np.asarray(out)[2]) == 0
+
+
+@settings(**SET)
+@given(
+    p=st.integers(2, 40),
+    cap=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([16, 64]),
+    b=st.integers(1, 12),
+)
+def test_page_gather_l2_matches_ref(p, cap, d, b):
+    rng = np.random.default_rng(p * 7 + b)
+    pages = jnp.asarray(rng.standard_normal((p, cap, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, p, (b,)), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    out = page_gather_l2(pages, ids, q, interpret=True)
+    want = ref.page_gather_l2_ref(pages, ids, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_ops_dispatch_to_ref_on_cpu():
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((9, 16)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.l2_distance(q, x)),
+        np.asarray(ref.l2_distance_ref(q, x)),
+        rtol=1e-5,
+    )

@@ -1,0 +1,110 @@
+"""End-to-end PageANN search behaviour (Algorithm 2) + memory-mode matrix."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import MemoryMode, PageANNConfig, PageANNIndex, recall_at_k
+from repro.core.vamana import brute_force_knn
+from repro.data.pipeline import clustered_vectors, query_vectors
+
+N, D, Q = 2500, 32, 25
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    x = clustered_vectors(N, D, num_clusters=32, seed=0)
+    q = query_vectors(x, Q, seed=1)
+    truth = brute_force_knn(x, q, 10)
+    return x, q, truth
+
+
+def _cfg(**kw):
+    base = dict(
+        dim=D, graph_degree=16, build_beam=32, pq_subspaces=8,
+        lsh_sample=512, lsh_entries=8, beam_width=64, max_hops=48,
+        memory_mode=MemoryMode.HYBRID,
+    )
+    base.update(kw)
+    return PageANNConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def hybrid_index(dataset):
+    x, _, _ = dataset
+    return PageANNIndex.build(x, _cfg())
+
+
+def test_recall_at_10(dataset, hybrid_index):
+    x, q, truth = dataset
+    res = hybrid_index.search(q, k=10)
+    r = recall_at_k(res.ids, truth)
+    assert r >= 0.85, r
+
+
+def test_io_accounting_invariants(dataset, hybrid_index):
+    _, q, _ = dataset
+    res = hybrid_index.search(q, k=10)
+    cfg = hybrid_index.cfg
+    assert (res.ios <= res.hops * cfg.io_batch).all()
+    assert (res.ios + res.cache_hits >= res.hops).all()   # >=1 fresh page/hop
+    assert (res.ios <= hybrid_index.store.num_pages).all()  # visited-set works
+
+
+@pytest.mark.parametrize("mode", list(MemoryMode))
+def test_memory_modes_all_reach_recall(dataset, mode):
+    x, q, truth = dataset
+    idx = PageANNIndex.build(x, _cfg(memory_mode=mode))
+    res = idx.search(q, k=10)
+    r = recall_at_k(res.ids, truth)
+    assert r >= 0.8, (mode, r)
+
+
+def test_mem_all_packs_more_vectors_per_page(dataset):
+    x, _, _ = dataset
+    disk = PageANNIndex.build(x, _cfg(memory_mode=MemoryMode.DISK_ONLY))
+    mem = PageANNIndex.build(x, _cfg(memory_mode=MemoryMode.MEM_ALL))
+    # Sec 4.3(3): freed page bytes -> more vectors per page -> fewer pages
+    assert mem.store.capacity > disk.store.capacity
+    assert mem.store.num_pages < disk.store.num_pages
+
+
+def test_page_cache_reduces_counted_ios(dataset):
+    x, q, truth = dataset
+    idx = PageANNIndex.build(x, _cfg(cache_pages=32))
+    before = idx.search(q, k=10)
+    idx.warm_cache(q)
+    after = idx.search(q, k=10)
+    assert after.cache_hits.sum() > 0
+    assert after.ios.mean() < before.ios.mean()
+    # caching must not change results
+    assert recall_at_k(after.ids, truth) >= recall_at_k(before.ids, truth) - 1e-9
+
+
+def test_results_sorted_and_unique(dataset, hybrid_index):
+    _, q, _ = dataset
+    res = hybrid_index.search(q, k=10)
+    for i in range(len(q)):
+        d = res.dists[i]
+        assert (np.diff(d[np.isfinite(d)]) >= -1e-6).all()
+        ids = res.ids[i][res.ids[i] >= 0]
+        assert len(np.unique(ids)) == len(ids)
+
+
+def test_beam_width_trades_io_for_recall(dataset):
+    x, q, truth = dataset
+    lo = PageANNIndex.build(x, _cfg(beam_width=16, lsh_entries=4))
+    hi = PageANNIndex.build(x, _cfg(beam_width=96, lsh_entries=16))
+    r_lo = recall_at_k(lo.search(q, k=10).ids, truth)
+    r_hi = recall_at_k(hi.search(q, k=10).ids, truth)
+    io_lo = lo.search(q, k=10).ios.mean()
+    io_hi = hi.search(q, k=10).ios.mean()
+    assert r_hi >= r_lo
+    assert io_hi >= io_lo
+
+
+def test_layout_equation_capacity():
+    cfg = _cfg(page_bytes=4096, pq_subspaces=8, page_degree=48)
+    cap = cfg.resolve_capacity()
+    # Sec 4.2 equation: (4096 - 8 - 48*4 - 24*8) / (32*4) for HYBRID
+    assert cap == (4096 - 8 - 48 * 4 - 24 * 8) // (32 * 4)
