@@ -18,6 +18,7 @@ def main() -> None:
         read_amplification,
         recall_io,
         scaling,
+        serve_throughput,
     )
 
     modules = [
@@ -26,6 +27,7 @@ def main() -> None:
         ("fig10_11_table4_memory_sweep", memory_sweep),
         ("fig12_scaling", scaling),
         ("table5_build_overhead", build_overhead),
+        ("serve_throughput", serve_throughput),
     ]
     failures = 0
     print("name,us_per_call,derived")

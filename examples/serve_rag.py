@@ -15,6 +15,7 @@ from repro.configs.registry import get_arch
 from repro.core import MemoryMode, PageANNConfig, PageANNIndex
 from repro.launch.serve import generate
 from repro.models import transformer as tf
+from repro.serve import BatchingEngine
 from repro.train.step import init_train_state
 
 
@@ -53,15 +54,24 @@ def main():
     print("building PageANN index over corpus embeddings …")
     index = PageANNIndex.build(corpus_emb, cfg)
 
-    # requests
+    # requests arrive one at a time; the batching engine collects them into
+    # one fixed-shape dispatch and demuxes results per request
+    engine = BatchingEngine.from_index(index, k=3, batch_size=4)
     requests = jnp.asarray(rng.integers(0, arch.vocab_size, (4, 8), np.int32))
     q_emb = np.asarray(embed(state.params, arch, requests), np.float32)
-    res = index.search(q_emb, k=3)
-    print(f"retrieved ids per request:\n{res.ids}")
-    print(f"mean page reads/request: {res.ios.mean():.1f}")
+    futures = [engine.submit(q) for q in q_emb]
+    engine.flush()
+    rows = [f.result() for f in futures]
+    ids = np.stack([r.result.ids for r in rows])
+    ios = np.stack([r.result.ios for r in rows])
+    print(f"retrieved ids per request:\n{ids}")
+    print(f"mean page reads/request: {ios.mean():.1f}")
+    m = engine.metrics()
+    print(f"engine: {m.requests} requests in {m.batches} batch(es), "
+          f"p50 latency {m.latency_ms_p50:.1f} ms")
 
     # prepend the top passage to each request and decode
-    top = np.where(res.ids[:, 0] >= 0, res.ids[:, 0], 0)
+    top = np.where(ids[:, 0] >= 0, ids[:, 0], 0)
     context = jnp.asarray(corpus_tokens[top])
     prompts = jnp.concatenate([context, requests], axis=1)
     out = generate(state.params, arch, prompts, gen=8)

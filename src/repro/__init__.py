@@ -1,0 +1,1 @@
+"""PageANN reproduction on the JAX/Pallas substrate (see README.md)."""

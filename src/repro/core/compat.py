@@ -1,0 +1,50 @@
+"""Version-portable wrappers over the jax sharding API.
+
+The mesh/shard_map surface moved between jax releases: ``shard_map`` lived
+in ``jax.experimental.shard_map`` (with a ``check_rep`` flag) before being
+promoted to ``jax.shard_map`` (flag renamed ``check_vma``), and
+``jax.make_mesh`` only grew ``axis_types`` after 0.4.x. Everything in this
+repo that touches a mesh goes through these two functions so the same code
+lowers on both the pinned CI jax and newer TPU toolchains.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` without version-specific ``axis_types`` kwargs."""
+    if hasattr(jax, "make_mesh"):
+        try:
+            axis_type = getattr(jax.sharding, "AxisType", None)
+            if axis_type is not None:
+                return jax.make_mesh(
+                    tuple(axis_shapes), tuple(axis_names),
+                    axis_types=(axis_type.Auto,) * len(tuple(axis_names)),
+                )
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+        except TypeError:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    from jax.experimental import mesh_utils
+
+    devices = mesh_utils.create_device_mesh(tuple(axis_shapes))
+    return jax.sharding.Mesh(devices, tuple(axis_names))
+
+
+def shard_map(
+    f: Callable, *, mesh: jax.sharding.Mesh, in_specs: Any, out_specs: Any
+) -> Callable:
+    """``shard_map`` with replication checking off (we mix collectives with
+    per-shard reductions, which the static checker rejects either way)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

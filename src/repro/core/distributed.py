@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import compat
 from repro.core import search as search_mod
 from repro.core.config import PageANNConfig
 
@@ -155,9 +156,8 @@ def make_sharded_search(
     in_specs = (data_spec, P(query_axis))
     out_specs = (P(query_axis), P(query_axis), P(query_axis), P(query_axis))
 
-    fn = jax.shard_map(
-        local_search, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
+    fn = compat.shard_map(
+        local_search, mesh=mesh, in_specs=in_specs, out_specs=out_specs
     )
     in_shard = (
         jax.tree.map(lambda s: NamedSharding(mesh, s), data_spec),

@@ -162,15 +162,19 @@ class PageANNIndex:
             **search_mod.search_kwargs(self.cfg, self.store.capacity),
         )
 
-    def search(self, queries: np.ndarray, k: int = 10) -> search_mod.SearchResult:
-        """Search; returns ORIGINAL vector ids."""
-        res = self._raw_search(jnp.asarray(queries, jnp.float32), k=k)
-        ids = np.asarray(res.ids)
+    def translate_ids(self, ids: np.ndarray) -> np.ndarray:
+        """Reassigned (page-packed) vector ids -> original ids, PAD kept."""
+        ids = np.asarray(ids)
         valid = ids >= 0
         old = np.full_like(ids, PAD)
         old[valid] = self.store.new_to_old[ids[valid]]
+        return old
+
+    def search(self, queries: np.ndarray, k: int = 10) -> search_mod.SearchResult:
+        """Search; returns ORIGINAL vector ids."""
+        res = self._raw_search(jnp.asarray(queries, jnp.float32), k=k)
         return search_mod.SearchResult(
-            ids=old,
+            ids=self.translate_ids(res.ids),
             dists=np.asarray(res.dists),
             ios=np.asarray(res.ios),
             hops=np.asarray(res.hops),

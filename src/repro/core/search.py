@@ -1,20 +1,27 @@
 """PageANN graph search — Algorithm 2, as a fixed-shape JAX program.
 
-Per query the loop maintains
+Per query the loop maintains a :class:`BeamState`:
   * a candidate set (size-L, distance-sorted, visited flags) over *vector*
     ids in the reassigned space (page = id // capacity),
   * a visited-page bitmap (the paper's visited set V),
   * a running exact-distance result set (size-K),
-and per hop it (1) picks up to b closest unvisited candidates whose pages are
-new, (2) gathers those page records in one batched read — the I/O unit, (3)
-scores every member vector exactly (MXU L2 kernel), (4) scores the pages'
-external neighbors with ADC over on-page or in-memory PQ codes depending on
-the memory-disk coordination mode, and (5) merges both sets.
+and per hop applies four pure transition functions:
+
+  ``select_batch``    pick up to b closest unvisited candidates on fresh
+                      pages — the I/O schedule for this hop,
+  ``score_members``   gather those page records in one batched read (the
+                      I/O unit; ``kernels.ops.page_gather_l2`` — scalar-
+                      prefetched page DMA on TPU, jnp oracle on CPU) and
+                      score every member vector exactly,
+  ``score_neighbors`` ADC-score the pages' external neighbors over on-page
+                      or in-memory PQ codes (``kernels.ops.pq_adc``),
+  ``merge``           fold both score sets into the beam and result top-k.
 
 Everything is fixed-shape: the loop is a ``lax.while_loop``, queries are
-vmapped, and the whole thing jits (and lowers for TPU meshes — see
-``core.distributed``). I/O and cache-hit counters reproduce the paper's
-"Mean I/Os" metric.
+vmapped (``batch_search``) and optionally sharded over a device mesh
+(``shard_search``). I/O and cache-hit counters reproduce the paper's
+"Mean I/Os" metric. Later async-prefetch / cache-eviction work should
+extend the transition functions, not re-inline the loop.
 """
 from __future__ import annotations
 
@@ -23,11 +30,14 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core import pq as pq_mod
 from repro.core.config import MemoryMode, PageANNConfig
 from repro.core.layout import MemoryTier, PageStore
-from repro.core.lsh import LSHIndex, hamming_distance, hash_codes
+from repro.core.lsh import LSHIndex, hash_codes
+from repro.kernels import ops
 
 PAD = -1
 INF = jnp.inf
@@ -82,6 +92,20 @@ class SearchResult(NamedTuple):
     cache_hits: jnp.ndarray  # (Q,) page reads served by the warmed cache
 
 
+class BeamState(NamedTuple):
+    """Per-query loop state of Algorithm 2 (one pytree, while_loop carry)."""
+
+    cand_ids: jnp.ndarray   # (L,) candidate vector ids, PAD padded
+    cand_d: jnp.ndarray     # (L,) estimated distances, INF padded
+    cand_vis: jnp.ndarray   # (L,) expanded/scheduled flags
+    page_vis: jnp.ndarray   # (P,) visited-page bitmap (the paper's V)
+    res_ids: jnp.ndarray    # (k,) running exact top-k ids
+    res_d: jnp.ndarray      # (k,) running exact top-k distances
+    io: jnp.ndarray         # () page reads served from 'disk'
+    cache_hits: jnp.ndarray  # () page reads served by the warmed cache
+    hops: jnp.ndarray       # () loop iterations
+
+
 def _mask_dups_keep_first(ids: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
     """Set distance to INF for duplicate ids (keeping one occurrence)."""
     order = jnp.argsort(ids)
@@ -89,6 +113,196 @@ def _mask_dups_keep_first(ids: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
     dup_sorted = jnp.concatenate([jnp.array([False]), s[1:] == s[:-1]])
     dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
     return jnp.where(dup & (ids != PAD), INF, d)
+
+
+# --------------------------------------------------------------------------
+# per-hop transition functions (pure; composed by _search_one's loop body)
+# --------------------------------------------------------------------------
+
+def init_state(
+    q: jnp.ndarray,
+    data: SearchData,
+    disk_lut: jnp.ndarray,
+    *,
+    beam: int,
+    k: int,
+    entries: int,
+) -> BeamState:
+    """In-memory routing (Alg. 2 line 4, Fig. 6 step 1): LSH entry points."""
+    num_pages = data.vecs.shape[0]
+    qcode = hash_codes(q[None], data.lsh_planes)[0]
+    ham = ops.hamming(data.lsh_codes, qcode)
+    top = jnp.argsort(ham)[:entries]
+    entry_ids = data.lsh_ids[top].astype(jnp.int32)
+    entry_d = ops.pq_adc(data.lsh_pq[top], disk_lut)
+    entry_d = _mask_dups_keep_first(entry_ids, entry_d)
+
+    cand_ids = jnp.full((beam,), PAD, jnp.int32).at[:entries].set(entry_ids)
+    cand_d = jnp.full((beam,), INF, jnp.float32).at[:entries].set(entry_d)
+    return BeamState(
+        cand_ids=cand_ids,
+        cand_d=cand_d,
+        cand_vis=jnp.zeros((beam,), bool),
+        page_vis=jnp.zeros((num_pages,), bool),
+        res_ids=jnp.full((k,), PAD, jnp.int32),
+        res_d=jnp.full((k,), INF, jnp.float32),
+        io=jnp.int32(0),
+        cache_hits=jnp.int32(0),
+        hops=jnp.int32(0),
+    )
+
+
+def select_batch(
+    state: BeamState, *, capacity: int, io_batch: int
+) -> tuple[BeamState, jnp.ndarray]:
+    """Pick up to b closest unvisited candidates whose pages are fresh.
+
+    Returns the updated state (candidates expanded, pages marked visited)
+    and the (b,) batch of page ids to read, PAD padded.
+    """
+    cand_ids = state.cand_ids
+    batch = jnp.full((io_batch,), PAD, jnp.int32)
+
+    def pick(j, carry):
+        cand_vis, page_vis, batch = carry
+        # skip candidates whose page is already visited/scheduled
+        cpages = jnp.where(cand_ids >= 0, cand_ids // capacity, 0)
+        stale = (cand_ids != PAD) & page_vis[cpages]
+        cand_vis2 = cand_vis | stale
+        masked = jnp.where(cand_vis2 | (cand_ids == PAD), INF, state.cand_d)
+        slot = jnp.argmin(masked)
+        ok = jnp.isfinite(masked[slot])
+        cand_vis2 = cand_vis2.at[slot].set(True)
+        pid = jnp.where(ok, cand_ids[slot] // capacity, PAD)
+        page_vis = jnp.where(
+            ok, page_vis.at[jnp.maximum(pid, 0)].set(True), page_vis
+        )
+        batch = batch.at[j].set(pid)
+        return cand_vis2, page_vis, batch
+
+    cand_vis, page_vis, batch = jax.lax.fori_loop(
+        0, io_batch, pick, (state.cand_vis, state.page_vis, batch)
+    )
+    return state._replace(cand_vis=cand_vis, page_vis=page_vis), batch
+
+
+def score_members(
+    q: jnp.ndarray, data: SearchData, batch: jnp.ndarray, *, capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Batched page read (Fig. 6 step 2, THE I/O) + exact member scoring.
+
+    The gather-and-score is one ``kernels.ops.page_gather_l2`` call: on TPU
+    the (b,) page ids are scalar-prefetched and each page record arrives as
+    one aligned HBM->VMEM DMA; on CPU the jnp oracle runs. Returns
+    (member_ids, member_dists) flattened to (b*cap,), plus this hop's
+    disk-I/O and cache-hit deltas.
+    """
+    cap = data.vecs.shape[1]
+    safe = jnp.maximum(batch, 0)
+    fetched = batch >= 0
+
+    ex = ops.page_gather_l2(data.vecs, safe, q)            # (b, cap)
+    slots = jnp.arange(cap)[None, :]
+    ex = jnp.where(slots < data.member_count[safe][:, None], ex, INF)
+    ex = jnp.where(fetched[:, None], ex, INF)
+    member_ids = (batch[:, None] * capacity + slots).astype(jnp.int32)
+
+    # warmed page cache (Sec 4.3): sorted-membership test
+    if data.cached_pages.shape[0] > 0:
+        pos = jnp.searchsorted(data.cached_pages, safe)
+        pos = jnp.minimum(pos, data.cached_pages.shape[0] - 1)
+        in_cache = data.cached_pages[pos] == safe
+    else:
+        in_cache = jnp.zeros_like(fetched)
+    io_delta = (fetched & ~in_cache).sum().astype(jnp.int32)
+    hit_delta = (fetched & in_cache).sum().astype(jnp.int32)
+    return member_ids.ravel(), ex.ravel(), io_delta, hit_delta
+
+
+def score_neighbors(
+    data: SearchData,
+    batch: jnp.ndarray,
+    state: BeamState,
+    disk_lut: jnp.ndarray,
+    mem_lut: jnp.ndarray,
+    *,
+    capacity: int,
+    mode: str,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Estimated distances for the fetched pages' external neighbors
+    (Fig. 6 steps 3-4) via ADC (``kernels.ops.pq_adc``) over on-page or
+    in-memory PQ codes per the memory-disk coordination mode. Returns
+    (neighbor_ids, estimated_dists) flattened to (b*Rp,), INF-masked."""
+    rp = data.nbr_ids.shape[1]
+    safe = jnp.maximum(batch, 0)
+    fetched = batch >= 0
+    page_nids = data.nbr_ids[safe]                          # (b, Rp)
+    page_ncodes = data.nbr_codes[safe]                      # (b, Rp, M_disk)
+    page_nc = data.nbr_count[safe]
+
+    flat_nids = page_nids.reshape(-1)                       # (b*Rp,)
+    valid_n = (
+        (jnp.arange(rp)[None, :] < page_nc[:, None]).reshape(-1)
+        & (flat_nids != PAD)
+        & fetched.repeat(rp)
+    )
+    safe_nids = jnp.maximum(flat_nids, 0)
+    est_disk = ops.pq_adc(
+        page_ncodes.reshape(-1, page_ncodes.shape[-1]), disk_lut
+    )
+    if mode == MemoryMode.DISK_ONLY.value:
+        est = est_disk
+    elif mode == MemoryMode.MEM_ALL.value:
+        est = ops.pq_adc(data.mem_codes[safe_nids], mem_lut)
+    else:  # HYBRID: prefer the higher-accuracy in-memory codes
+        est_mem = ops.pq_adc(data.mem_codes[safe_nids], mem_lut)
+        est = jnp.where(data.mem_mask[safe_nids], est_mem, est_disk)
+    est = jnp.where(valid_n, est, INF)
+    # skip neighbors on already-visited pages
+    est = jnp.where(state.page_vis[safe_nids // capacity], INF, est)
+    # skip neighbors already in the candidate set
+    dup_in_cand = (flat_nids[:, None] == state.cand_ids[None, :]).any(1)
+    est = jnp.where(dup_in_cand, INF, est)
+    # dedupe within this batch
+    est = _mask_dups_keep_first(flat_nids, est)
+    return flat_nids, est
+
+
+def merge(
+    state: BeamState,
+    member_ids: jnp.ndarray,
+    member_d: jnp.ndarray,
+    nbr_ids: jnp.ndarray,
+    nbr_d: jnp.ndarray,
+    io_delta: jnp.ndarray,
+    hit_delta: jnp.ndarray,
+) -> BeamState:
+    """Fold exact member scores into the result top-k and estimated
+    neighbor scores into the beam (Alg. 2 line 12, Fig. 6 step 5)."""
+    k = state.res_ids.shape[0]
+    beam = state.cand_ids.shape[0]
+
+    all_rd = jnp.concatenate([state.res_d, member_d])
+    all_ri = jnp.concatenate([state.res_ids, member_ids])
+    order = jnp.argsort(all_rd)[:k]
+    res_d, res_ids = all_rd[order], all_ri[order]
+
+    all_ci = jnp.concatenate([state.cand_ids, nbr_ids])
+    all_cd = jnp.concatenate([state.cand_d, nbr_d])
+    all_cv = jnp.concatenate(
+        [state.cand_vis, jnp.zeros(nbr_ids.shape, bool)]
+    )
+    order = jnp.argsort(all_cd)[:beam]
+    return state._replace(
+        cand_ids=all_ci[order],
+        cand_d=all_cd[order],
+        cand_vis=all_cv[order],
+        res_ids=res_ids,
+        res_d=res_d,
+        io=state.io + io_delta,
+        cache_hits=state.cache_hits + hit_delta,
+        hops=state.hops + 1,
+    )
 
 
 def _search_one(
@@ -103,147 +317,36 @@ def _search_one(
     entries: int,
     mode: str,
 ):
-    P = data.vecs.shape[0]
-    cap, d = data.vecs.shape[1], data.vecs.shape[2]
-    rp = data.nbr_ids.shape[1]
-
     disk_lut = pq_mod.pq_lut(q, data.disk_codebooks)  # (M_disk, ksub)
     mem_lut = pq_mod.pq_lut(q, data.mem_codebooks)    # (M_mem, ksub)
+    state = init_state(q, data, disk_lut, beam=beam, k=k, entries=entries)
 
-    # ---- in-memory routing (Alg. 2 line 4, Fig. 6 step 1) ----
-    qcode = hash_codes(q[None], data.lsh_planes)[0]
-    ham = hamming_distance(data.lsh_codes, qcode)
-    top = jnp.argsort(ham)[:entries]
-    entry_ids = data.lsh_ids[top].astype(jnp.int32)
-    entry_d = pq_mod.adc_distance(data.lsh_pq[top], disk_lut)
-    entry_d = _mask_dups_keep_first(entry_ids, entry_d)
-
-    cand_ids = jnp.full((beam,), PAD, jnp.int32)
-    cand_d = jnp.full((beam,), INF, jnp.float32)
-    cand_vis = jnp.zeros((beam,), bool)
-    cand_ids = cand_ids.at[:entries].set(entry_ids)
-    cand_d = cand_d.at[:entries].set(entry_d)
-
-    page_vis = jnp.zeros((P,), bool)
-    res_ids = jnp.full((k,), PAD, jnp.int32)
-    res_d = jnp.full((k,), INF, jnp.float32)
-    io = jnp.int32(0)
-    hits = jnp.int32(0)
-    hops = jnp.int32(0)
-
-    def cond(state):
-        cand_ids, cand_d, cand_vis, page_vis, res_ids, res_d, io, hits, hops = state
-        live = (~cand_vis) & (cand_ids != PAD) & jnp.isfinite(cand_d)
-        return live.any() & (hops < max_hops)
-
-    def body(state):
-        cand_ids, cand_d, cand_vis, page_vis, res_ids, res_d, io, hits, hops = state
-
-        # ---- select up to b closest unvisited candidates on fresh pages ----
-        batch = jnp.full((io_batch,), PAD, jnp.int32)
-
-        def pick(j, carry):
-            cand_vis, page_vis, batch = carry
-            # skip candidates whose page is already visited/scheduled
-            cpages = jnp.where(cand_ids >= 0, cand_ids // capacity, 0)
-            stale = (cand_ids != PAD) & page_vis[cpages]
-            cand_vis2 = cand_vis | stale
-            masked = jnp.where(
-                cand_vis2 | (cand_ids == PAD), INF, cand_d
-            )
-            slot = jnp.argmin(masked)
-            ok = jnp.isfinite(masked[slot])
-            cand_vis2 = cand_vis2.at[slot].set(True)
-            pid = jnp.where(ok, cand_ids[slot] // capacity, PAD)
-            page_vis = jnp.where(
-                ok, page_vis.at[jnp.maximum(pid, 0)].set(True), page_vis
-            )
-            batch = batch.at[j].set(pid)
-            return cand_vis2, page_vis, batch
-
-        cand_vis, page_vis, batch = jax.lax.fori_loop(
-            0, io_batch, pick, (cand_vis, page_vis, batch)
+    def cond(state: BeamState):
+        live = (
+            (~state.cand_vis)
+            & (state.cand_ids != PAD)
+            & jnp.isfinite(state.cand_d)
         )
+        return live.any() & (state.hops < max_hops)
 
-        # ---- batched page read (Fig. 6 step 2): THE I/O ----
-        safe = jnp.maximum(batch, 0)
-        page_vecs = data.vecs[safe]            # (b, cap, d)
-        page_mc = data.member_count[safe]      # (b,)
-        page_nids = data.nbr_ids[safe]         # (b, Rp)
-        page_ncodes = data.nbr_codes[safe]     # (b, Rp, M_disk)
-        page_nc = data.nbr_count[safe]
-
-        fetched = batch >= 0
-        # warmed page cache (Sec 4.3): sorted-membership test
-        if data.cached_pages.shape[0] > 0:
-            pos = jnp.searchsorted(data.cached_pages, safe)
-            pos = jnp.minimum(pos, data.cached_pages.shape[0] - 1)
-            in_cache = data.cached_pages[pos] == safe
-        else:
-            in_cache = jnp.zeros_like(fetched)
-        io = io + (fetched & ~in_cache).sum().astype(jnp.int32)
-        hits = hits + (fetched & in_cache).sum().astype(jnp.int32)
-
-        # ---- exact distances for every member vector (step 5) ----
-        ex = jnp.sum((page_vecs - q[None, None, :]) ** 2, axis=-1)  # (b, cap)
-        slots = jnp.arange(cap)[None, :]
-        ex = jnp.where(slots < page_mc[:, None], ex, INF)
-        ex = jnp.where(fetched[:, None], ex, INF)
-        mids = (batch[:, None] * capacity + slots).astype(jnp.int32)
-        all_rd = jnp.concatenate([res_d, ex.ravel()])
-        all_ri = jnp.concatenate([res_ids, mids.ravel()])
-        order = jnp.argsort(all_rd)[:k]
-        res_d, res_ids = all_rd[order], all_ri[order]
-
-        # ---- estimated distances for page neighbors (steps 3-4) ----
-        flat_nids = page_nids.reshape(-1)                       # (b*Rp,)
-        valid_n = (
-            (jnp.arange(rp)[None, :] < page_nc[:, None]).reshape(-1)
-            & (flat_nids != PAD)
-            & fetched.repeat(rp)
+    def body(state: BeamState):
+        state, batch = select_batch(
+            state, capacity=capacity, io_batch=io_batch
         )
-        safe_nids = jnp.maximum(flat_nids, 0)
-        est_disk = pq_mod.adc_distance(
-            page_ncodes.reshape(-1, page_ncodes.shape[-1]), disk_lut
+        mids, md, io_delta, hit_delta = score_members(
+            q, data, batch, capacity=capacity
         )
-        if mode == MemoryMode.DISK_ONLY.value:
-            est = est_disk
-        elif mode == MemoryMode.MEM_ALL.value:
-            est = pq_mod.adc_distance(data.mem_codes[safe_nids], mem_lut)
-        else:  # HYBRID: prefer the higher-accuracy in-memory codes
-            est_mem = pq_mod.adc_distance(data.mem_codes[safe_nids], mem_lut)
-            est = jnp.where(data.mem_mask[safe_nids], est_mem, est_disk)
-        est = jnp.where(valid_n, est, INF)
-        # skip neighbors on already-visited pages
-        est = jnp.where(page_vis[safe_nids // capacity], INF, est)
-        # skip neighbors already in the candidate set
-        dup_in_cand = (flat_nids[:, None] == cand_ids[None, :]).any(1)
-        est = jnp.where(dup_in_cand, INF, est)
-        # dedupe within this batch
-        est = _mask_dups_keep_first(flat_nids, est)
-
-        all_ci = jnp.concatenate([cand_ids, flat_nids])
-        all_cd = jnp.concatenate([cand_d, est])
-        all_cv = jnp.concatenate([cand_vis, jnp.zeros_like(valid_n)])
-        order = jnp.argsort(all_cd)[:beam]
-        return (
-            all_ci[order], all_cd[order], all_cv[order],
-            page_vis, res_ids, res_d, io, hits, hops + 1,
+        nids, nd = score_neighbors(
+            data, batch, state, disk_lut, mem_lut,
+            capacity=capacity, mode=mode,
         )
+        return merge(state, mids, md, nids, nd, io_delta, hit_delta)
 
-    state = (cand_ids, cand_d, cand_vis, page_vis, res_ids, res_d, io, hits, hops)
     state = jax.lax.while_loop(cond, body, state)
-    _, _, _, _, res_ids, res_d, io, hits, hops = state
-    return res_ids, res_d, io, hops, hits
+    return state.res_ids, state.res_d, state.io, state.hops, state.cache_hits
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "capacity", "beam", "io_batch", "k", "max_hops", "entries", "mode"
-    ),
-)
-def batch_search(
+def _batch_search_impl(
     queries: jnp.ndarray,
     data: SearchData,
     *,
@@ -255,7 +358,6 @@ def batch_search(
     entries: int,
     mode: str,
 ) -> SearchResult:
-    """Search a batch of queries. queries: (Q, d)."""
     fn = functools.partial(
         _search_one,
         data=data,
@@ -269,6 +371,97 @@ def batch_search(
     )
     ids, dists, ios, hops, hits = jax.vmap(fn)(queries)
     return SearchResult(ids=ids, dists=dists, ios=ios, hops=hops, cache_hits=hits)
+
+
+batch_search = jax.jit(
+    _batch_search_impl,
+    static_argnames=(
+        "capacity", "beam", "io_batch", "k", "max_hops", "entries", "mode"
+    ),
+)
+batch_search.__doc__ = """Search a batch of queries. queries: (Q, d)."""
+
+
+# --------------------------------------------------------------------------
+# mesh-sharded entry point: shard the query batch, replicate the index
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _shard_search_fn(
+    mesh, capacity, beam, io_batch, k, max_hops, entries, mode
+):
+    """jitted shard_map: queries split over every mesh axis, data replicated.
+
+    Cached per (mesh, static config) so repeated serving calls reuse the
+    compiled executable.
+    """
+    axes = tuple(mesh.axis_names)
+    local = functools.partial(
+        _batch_search_impl,
+        capacity=capacity,
+        beam=beam,
+        io_batch=io_batch,
+        k=k,
+        max_hops=max_hops,
+        entries=entries,
+        mode=mode,
+    )
+    data_spec = jax.tree.map(
+        lambda _: P(), SearchData(*[0] * len(SearchData._fields))
+    )
+    fn = compat.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axes), data_spec),
+        out_specs=P(axes),
+    )
+    return jax.jit(fn)
+
+
+def shard_search(
+    queries: jnp.ndarray,
+    data: SearchData,
+    *,
+    mesh=None,
+    capacity: int,
+    beam: int,
+    io_batch: int,
+    k: int,
+    max_hops: int,
+    entries: int,
+    mode: str,
+) -> SearchResult:
+    """``batch_search`` with the query batch sharded across a device mesh.
+
+    The index (``data``) is replicated on every device; the (Q, d) query
+    batch is split over all mesh axes — the paper's "query threads"
+    throughput dimension mapped onto chips. Ragged batches are zero-padded
+    to a multiple of the mesh size and trimmed from the result. On a
+    1-device mesh this runs the exact ``_batch_search_impl`` trace, so ids
+    and distances are bitwise identical to ``batch_search``. (Index
+    sharding — partitioning the vectors themselves — is the orthogonal
+    axis and lives in ``core.distributed``.)
+    """
+    if mesh is None:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh()
+    fn = _shard_search_fn(
+        mesh, capacity, beam, io_batch, k, max_hops, entries, mode
+    )
+    num_dev = 1
+    for n in mesh.shape.values():
+        num_dev *= n
+    qn = queries.shape[0]
+    pad = (-qn) % num_dev
+    if pad:
+        queries = jnp.concatenate(
+            [queries, jnp.zeros((pad, queries.shape[1]), queries.dtype)]
+        )
+    res = fn(queries, data)
+    if pad:
+        res = jax.tree.map(lambda a: a[:qn], res)
+    return res
 
 
 def search_kwargs(cfg: PageANNConfig, capacity: int) -> dict:

@@ -8,23 +8,18 @@ slow inter-pod links off the per-layer critical path.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1-device mesh for CPU smoke runs of the same code path."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
-    )
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline (EXPERIMENTS.md §Roofline).

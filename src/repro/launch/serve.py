@@ -2,8 +2,8 @@
 augmented through a PageANN index (the paper's system as a first-class
 serving feature — see examples/serve_rag.py for the full RAG loop).
 
-Usage (CPU smoke):
-  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
+Usage (CPU smoke; --arch defaults to granite-3-2b):
+  PYTHONPATH=src python -m repro.launch.serve --smoke \
       --batch 4 --prompt-len 32 --gen 16
 """
 from __future__ import annotations
@@ -39,7 +39,7 @@ def generate(params, arch, prompts: jnp.ndarray, gen: int):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--arch", default="granite-3-2b", choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

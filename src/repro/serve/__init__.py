@@ -1,0 +1,3 @@
+from repro.serve.engine import BatchingEngine, EngineMetrics, RequestResult
+
+__all__ = ["BatchingEngine", "EngineMetrics", "RequestResult"]

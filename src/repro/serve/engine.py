@@ -1,0 +1,294 @@
+"""Request-batching serving frontend for PageANN search.
+
+The jitted search is fixed-shape: one compiled executable per (batch, k)
+pair. A serving workload, though, is a stream of single queries arriving at
+arbitrary times. This engine bridges the two — the paper's "query threads"
+as a batching frontend:
+
+  * ``submit`` enqueues one query and returns a future;
+  * a batch dispatches when ``batch_size`` requests are pending, when
+    ``timeout_ms`` elapses after the first pending request, or on an
+    explicit ``flush`` — whichever comes first. The search runs in the
+    thread that triggered the dispatch (the batch-completing submitter,
+    the timer, or the flusher), so one submit() in every ``batch_size``
+    pays the search latency inline — amortized, not hidden;
+  * ragged batches are zero-padded to the fixed ``batch_size`` shape (one
+    executable, no recompiles) and the pad rows' results are dropped;
+  * results are demultiplexed back to futures in submission order, with
+    per-request latency and aggregate QPS / mean-I/O counters.
+
+The engine lock covers only queue and counter bookkeeping — the search
+itself runs outside it, so other threads keep enqueuing (and the next
+batch keeps filling) while a batch computes.
+
+The backend is any ``fn(queries (B, d)) -> SearchResult``-like pytree with
+a leading batch axis — ``core.search.batch_search`` on one device,
+``core.search.shard_search`` across a mesh (``from_index(mesh=...)``).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, NamedTuple
+
+import jax
+import numpy as np
+
+
+class RequestResult(NamedTuple):
+    """One request's slice of the batch result, plus serving metadata."""
+
+    result: Any          # per-request pytree (leaves: leading axis removed)
+    latency_ms: float    # submit -> demux wall time
+    batch_size: int      # how many real requests shared the dispatch
+    batch_index: int     # which dispatch served it (0-based)
+
+
+class EngineMetrics(NamedTuple):
+    requests: int
+    batches: int
+    qps: float                 # completed requests / wall time since first submit
+    latency_ms_mean: float     # over the trailing latency window
+    latency_ms_p50: float
+    latency_ms_p99: float
+    mean_ios: float            # mean disk page reads per request
+    mean_batch_occupancy: float  # real requests per dispatched batch
+    padded_fraction: float     # pad rows / dispatched rows
+
+
+class _Pending(NamedTuple):
+    future: Future
+    query: np.ndarray
+    t_submit: float
+
+
+class BatchingEngine:
+    def __init__(
+        self,
+        search_fn: Callable[[np.ndarray], Any],
+        *,
+        dim: int,
+        batch_size: int = 64,
+        timeout_ms: float | None = None,
+        latency_window: int = 8192,
+        dtype=np.float32,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self._search_fn = search_fn
+        self._dim = dim
+        self._batch_size = batch_size
+        self._timeout_ms = timeout_ms
+        self._dtype = dtype
+        self._clock = clock
+        self._lock = threading.RLock()
+        self._pending: list[_Pending] = []
+        self._timer: threading.Timer | None = None
+        self._timer_gen = 0     # invalidates stale timers (see _flush_due)
+        self._closed = False
+        # aggregate counters (window-bounded where they would otherwise grow)
+        self._latencies_ms: collections.deque = collections.deque(
+            maxlen=latency_window
+        )
+        self._completed = 0
+        self._total_ios = 0.0
+        self._batches = 0
+        self._dispatched_rows = 0
+        self._padded_rows = 0
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+
+    # ------------------------------------------------------------- requests
+    def submit(self, query: np.ndarray) -> Future:
+        """Enqueue one (d,) query; returns a Future[RequestResult]."""
+        q = np.asarray(query, self._dtype).reshape(-1)
+        if q.shape[0] != self._dim:
+            raise ValueError(f"query dim {q.shape[0]} != engine dim {self._dim}")
+        fut: Future = Future()
+        batch = None
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            if self._t_first is None:
+                self._t_first = self._clock()
+            self._pending.append(_Pending(fut, q, self._clock()))
+            if len(self._pending) >= self._batch_size:
+                batch = self._take_locked()
+            elif self._timeout_ms is not None and self._timer is None:
+                gen = self._timer_gen
+                self._timer = threading.Timer(
+                    self._timeout_ms / 1e3, self._flush_due, args=(gen,)
+                )
+                self._timer.daemon = True
+                self._timer.start()
+        if batch is not None:
+            self._run_batch(batch)
+        return fut
+
+    def flush(self) -> None:
+        """Dispatch whatever is pending, padding the ragged batch."""
+        while True:
+            with self._lock:
+                batch = self._take_locked() if self._pending else None
+            if batch is None:
+                return
+            self._run_batch(batch)
+
+    def search(self, queries: np.ndarray) -> list[RequestResult]:
+        """Synchronous convenience: submit a (Q, d) batch, flush, gather."""
+        futs = [self.submit(q) for q in np.asarray(queries)]
+        self.flush()
+        return [f.result() for f in futs]
+
+    def close(self) -> None:
+        self.flush()
+        with self._lock:
+            self._closed = True
+            if self._timer is not None:
+                self._timer.cancel()
+                self._timer = None
+
+    # ------------------------------------------------------------- dispatch
+    def _flush_due(self, gen: int) -> None:
+        """Timer callback. A timer that raced a size-triggered dispatch (its
+        generation was retired by _take_locked before it got the lock) must
+        no-op, or it would prematurely flush the NEXT batch."""
+        with self._lock:
+            if gen != self._timer_gen or self._closed:
+                return
+            self._timer = None
+            batch = self._take_locked() if self._pending else None
+        if batch is not None:
+            self._run_batch(batch)
+
+    def _take_locked(self) -> tuple[int, list[_Pending]]:
+        """Pop up to batch_size pending requests and retire the live timer.
+        Caller must hold the lock; the batch index is assigned here so
+        dispatch order matches take order even with concurrent submitters."""
+        take = self._pending[: self._batch_size]
+        self._pending = self._pending[self._batch_size:]
+        self._timer_gen += 1
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        batch_index = self._batches
+        self._batches += 1
+        return batch_index, take
+
+    def _run_batch(self, batch: tuple[int, list[_Pending]]) -> None:
+        """Pad, search (outside the lock), record counters, demux."""
+        batch_index, take = batch
+        n = len(take)
+        padded = np.zeros((self._batch_size, self._dim), self._dtype)
+        for i, p in enumerate(take):
+            padded[i] = p.query
+        try:
+            out = self._search_fn(padded)
+            out = jax.tree.map(np.asarray, out)
+        except Exception as e:
+            # a backend failure must reach every waiter through its future —
+            # not hang them, and not vanish into the timer thread's
+            # excepthook (submit/flush never raise backend errors)
+            with self._lock:
+                self._dispatched_rows += self._batch_size
+                self._padded_rows += self._batch_size - n
+            for p in take:
+                p.future.set_exception(e)
+            return
+
+        t_done = self._clock()
+        ios = getattr(out, "ios", None)
+        latencies = [(t_done - p.t_submit) * 1e3 for p in take]
+        with self._lock:
+            self._dispatched_rows += self._batch_size
+            self._padded_rows += self._batch_size - n
+            self._t_last = t_done
+            self._completed += n
+            self._latencies_ms.extend(latencies)
+            if ios is not None:
+                self._total_ios += float(np.sum(ios[:n]))
+        for i, p in enumerate(take):
+            row = jax.tree.map(lambda a: a[i], out)
+            p.future.set_result(
+                RequestResult(
+                    result=row,
+                    latency_ms=latencies[i],
+                    batch_size=n,
+                    batch_index=batch_index,
+                )
+            )
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> EngineMetrics:
+        with self._lock:
+            lat = np.asarray(self._latencies_ms, np.float64)
+            done = self._completed
+            wall = (
+                (self._t_last - self._t_first)
+                if done and self._t_last is not None
+                else 0.0
+            )
+            return EngineMetrics(
+                requests=done,
+                batches=self._batches,
+                qps=done / wall if wall > 0 else float(done and np.inf),
+                latency_ms_mean=float(lat.mean()) if len(lat) else 0.0,
+                latency_ms_p50=float(np.percentile(lat, 50)) if len(lat) else 0.0,
+                latency_ms_p99=float(np.percentile(lat, 99)) if len(lat) else 0.0,
+                mean_ios=self._total_ios / done if done else 0.0,
+                mean_batch_occupancy=(
+                    (self._dispatched_rows - self._padded_rows) / self._batches
+                    if self._batches
+                    else 0.0
+                ),
+                padded_fraction=(
+                    self._padded_rows / self._dispatched_rows
+                    if self._dispatched_rows
+                    else 0.0
+                ),
+            )
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def from_index(
+        cls,
+        index,
+        *,
+        k: int = 10,
+        batch_size: int = 64,
+        timeout_ms: float | None = None,
+        mesh=None,
+        **kwargs,
+    ) -> "BatchingEngine":
+        """Engine over a built ``PageANNIndex``; results carry ORIGINAL ids.
+
+        ``mesh=None`` dispatches ``batch_search`` on the default device;
+        passing a mesh (see ``launch.mesh``) dispatches ``shard_search``
+        with the query batch split across it.
+        """
+        from repro.core import search as search_mod
+
+        kw = search_mod.search_kwargs(index.cfg, index.store.capacity)
+
+        def fn(queries: np.ndarray):
+            import jax.numpy as jnp
+
+            qj = jnp.asarray(queries)
+            if mesh is None:
+                res = search_mod.batch_search(qj, index.data, k=k, **kw)
+            else:
+                res = search_mod.shard_search(
+                    qj, index.data, mesh=mesh, k=k, **kw
+                )
+            return res._replace(ids=index.translate_ids(res.ids))
+
+        return cls(
+            fn,
+            dim=index.cfg.dim,
+            batch_size=batch_size,
+            timeout_ms=timeout_ms,
+            **kwargs,
+        )

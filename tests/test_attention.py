@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property sweeps skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import blockwise_attention, decode_attention

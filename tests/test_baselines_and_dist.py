@@ -53,6 +53,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import MemoryMode, PageANNConfig, recall_at_k
+from repro.core import compat
 from repro.core import distributed as dist
 from repro.core.vamana import brute_force_knn
 from repro.data.pipeline import clustered_vectors, query_vectors
@@ -63,10 +64,9 @@ truth = brute_force_knn(x, q, 10)
 cfg = PageANNConfig(dim=32, graph_degree=12, build_beam=24, pq_subspaces=8,
                     lsh_sample=256, lsh_entries=8, beam_width=48, max_hops=48)
 sh = dist.build_sharded_index(x, cfg, num_shards=2)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 2), ("data", "model"))
 fn, _ = dist.make_sharded_search(mesh, cfg, sh.capacity, k=10)
-with jax.set_mesh(mesh):
+with mesh:
     ids, tag, d, ios = fn(sh.data, jnp.asarray(q))
 old = dist.translate_ids(sh, np.asarray(ids), np.asarray(tag))
 print(json.dumps({"recall": recall_at_k(old, truth),

@@ -1,6 +1,7 @@
 """Vamana + page-graph construction invariants (Algorithm 1)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property sweeps skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import page_graph as pg

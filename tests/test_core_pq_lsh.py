@@ -1,6 +1,9 @@
 """PQ + LSH component tests (quality + invariants)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property sweeps skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import lsh as lsh_mod

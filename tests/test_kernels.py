@@ -3,6 +3,7 @@ swept over shapes and dtypes (hypothesis)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property sweeps skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
