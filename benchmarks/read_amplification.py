@@ -4,6 +4,11 @@ PageANN fetches whole pages whose entire content (member vectors + topology
 + on-page compressed neighbors) is consumed by Alg. 2 — amplification ~1 by
 construction (padding only). DiskANN-style traversal fetches a 4 KB page per
 expanded node but uses only that node's (vector + adjacency) record.
+
+The PageANN "padded" figure is the packed record tile actually DMA'd per
+hop (``PageStore.recs``, densely packed members + f32-lane neighbor codes
++ counts — see ``layout.pack_page_records``), so the ratio reports the real
+lane-padding overhead of the TPU mapping, not a hypothetical tight packing.
 """
 from __future__ import annotations
 

@@ -21,6 +21,9 @@ def main() -> None:
         serve_throughput,
     )
 
+    # benchmarks.search_hotpath is NOT registered here: CI runs it as its
+    # own regression-gated step (--check BENCH_serve.json) right after this
+    # harness, and registering it too would pay for the sweep twice.
     modules = [
         ("table1_read_amplification", read_amplification),
         ("fig7_8_table3_recall_io", recall_io),

@@ -73,6 +73,12 @@ class PageANNConfig:
             raise ValueError("dim must be divisible by pq_subspaces")
         if self.lsh_bits % 32 != 0:
             raise ValueError("lsh_bits must be a multiple of 32 (packed words)")
+        if self.page_degree > 128:
+            raise ValueError(
+                "page_degree must be <= 128: the packed page record stores "
+                "one neighbor per f32 lane per PQ subspace (layout.pack_"
+                "page_records); the paper uses R_p = 48"
+            )
 
     @property
     def pq_code_bytes(self) -> int:

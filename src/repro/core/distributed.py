@@ -68,10 +68,9 @@ def build_sharded_index(
             return jnp.pad(a, widths, constant_values=fill)
 
         return d._replace(
-            vecs=padp(d.vecs, 0.0),
+            page_recs=padp(d.page_recs, 0.0),
             member_count=padp(d.member_count, 0),
             nbr_ids=padp(d.nbr_ids, PAD),
-            nbr_codes=padp(d.nbr_codes, 0),
             nbr_count=padp(d.nbr_count, 0),
         )
 

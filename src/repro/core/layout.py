@@ -24,15 +24,37 @@ from repro.core.config import MemoryMode, PageANNConfig
 from repro.core.page_graph import PAD, PageGrouping
 
 
+# record geometry is owned by kernels.record_layout (the kernel and its
+# oracle read the same tile this module packs); re-exported for callers
+from repro.kernels.record_layout import (  # noqa: F401  (re-exports)
+    PAGE_LANES,
+    member_rows,
+    record_rows,
+    rows_per_vector,
+    vectors_per_row,
+)
+
+
 @dataclasses.dataclass
 class PageStore:
-    """The 'disk tier': page records as one big gather-addressable array set."""
+    """The 'disk tier': page records as one big gather-addressable array set.
 
-    vecs: jnp.ndarray        # (P, capacity, d) f32 — member vectors
+    ``recs`` is the physical page record the search path reads — members,
+    neighbor codes, and counts packed into one (rows, 128)-lane f32 tile per
+    page (``pack_page_records``) so a hop's scored page payload is a single
+    aligned DMA through ``kernels.ops.page_scan`` (neighbor *ids* and the
+    count vectors ride as small int side arrays in ``SearchData``). The
+    unpacked ``vecs`` / ``nbr_codes`` views are host-side numpy for
+    build-time tooling and test oracles only — they never reach device
+    memory, so HBM holds one copy of the disk tier.
+    """
+
+    vecs: np.ndarray         # (P, capacity, d) f32 — member vectors (host)
     member_count: jnp.ndarray  # (P,) int32
     nbr_ids: jnp.ndarray     # (P, R_p) int32, REASSIGNED vector ids, PAD=-1
-    nbr_codes: jnp.ndarray   # (P, R_p, M_disk) uint8 — on-page compressed nbrs
+    nbr_codes: np.ndarray    # (P, R_p, M_disk) uint8 — unpacked codes (host)
     nbr_count: jnp.ndarray   # (P,) int32
+    recs: jnp.ndarray        # (P, rows, 128) f32 — packed page records
     capacity: int
     dim: int
     # id reassignment maps (host-side numpy; not used on the search path)
@@ -60,12 +82,8 @@ class PageStore:
         )
 
     def padded_tile_bytes(self) -> int:
-        """Bytes per page after (8,128) f32 lane padding (the DMA burst)."""
-        lanes = self.capacity * self.dim + self.nbr_ids.shape[1] \
-            + self.nbr_codes.shape[1] * self.nbr_codes.shape[2] // 4 + 2
-        rows = -(-lanes // 128)          # ceil to 128-lane rows
-        rows = -(-rows // 8) * 8         # ceil to 8-row sublanes
-        return rows * 128 * 4
+        """Bytes per page of the packed record actually DMA'd per hop."""
+        return int(self.recs.shape[1] * self.recs.shape[2] * 4)
 
 
 def reassign_ids(grouping: PageGrouping) -> tuple[np.ndarray, np.ndarray]:
@@ -80,6 +98,55 @@ def reassign_ids(grouping: PageGrouping) -> tuple[np.ndarray, np.ndarray]:
     old_to_new = np.full(n, PAD, np.int64)
     old_to_new[flat[valid]] = np.nonzero(valid)[0]
     return new_to_old, old_to_new
+
+
+def pack_page_records(vecs: np.ndarray, nbr_codes: np.ndarray) -> np.ndarray:
+    """Pack per-page arrays into one (P, rows, 128) f32 record tile.
+
+    Mirrors the paper's on-page layout (Fig. 5) in TPU lane geometry so
+    that ``kernels.ops.page_scan`` reads a hop's entire *scored* payload —
+    member vectors and neighbor PQ codes — in ONE aligned DMA per page.
+    (Member/neighbor counts and neighbor ids are per-page scalars/small int
+    vectors; they ride ``SearchData`` side arrays rather than wasting f32
+    record lanes nothing on the scoring path would read.)
+
+    Member block, with ``vpr = 128 // d`` vectors per row for d <= 128 and
+    ``rpv = ceil(d / 128)`` rows per vector for d > 128:
+
+      rows [0, Rv)       member vectors: vector i at row i // vpr, cols
+                         [(i % vpr)*d, (i % vpr + 1)*d)  (d <= 128, dense —
+                         a d=32 page wastes no lanes instead of 3/4), or
+                         spanning rows [i*rpv, (i+1)*rpv) with the tail row
+                         zero-padded (d > 128); Rv = member_rows(cap, d)
+      rows [Rv, Rv+M)    neighbor PQ codes, subspace-major (row Rv+j holds
+                         code j of neighbors 0..Rp-1 in cols [0, Rp)) — the
+                         transpose keeps the kernel's per-subspace one-hot
+                         contraction free of in-kernel transposes
+      rows padded up to a multiple of 8 ((8, 128) f32 tile alignment)
+
+    Unused lanes are zero; consumers mask via the side-array counts.
+    """
+    p, cap, d = vecs.shape
+    rp, m = nbr_codes.shape[1:]
+    if rp > PAGE_LANES:
+        raise ValueError(
+            f"packed page record needs page_degree<={PAGE_LANES}, got Rp={rp}"
+        )
+    mrows = member_rows(cap, d)
+    rows = record_rows(cap, d, m)
+    rec = np.zeros((p, rows, PAGE_LANES), np.float32)
+    if d <= PAGE_LANES:
+        vpr = vectors_per_row(d)
+        padded = np.zeros((p, mrows * vpr, d), np.float32)
+        padded[:, :cap] = vecs
+        rec[:, :mrows, : vpr * d] = padded.reshape(p, mrows, vpr * d)
+    else:
+        rpv = rows_per_vector(d)
+        padded = np.zeros((p, cap, rpv * PAGE_LANES), np.float32)
+        padded[:, :, :d] = vecs
+        rec[:, :mrows, :] = padded.reshape(p, mrows, PAGE_LANES)
+    rec[:, mrows:mrows + m, :rp] = nbr_codes.transpose(0, 2, 1)
+    return rec
 
 
 def pack_pages(
@@ -115,12 +182,22 @@ def pack_pages(
     nbr_codes = np.zeros((*page_nbrs_old.shape, m_disk), np.uint8)
     nbr_codes[nbr_valid] = disk_codes_old[page_nbrs_old[nbr_valid]]
 
+    # MEM_ALL keeps every compressed vector in the memory tier (Sec 4.3(3));
+    # the search never ADC-scores on-page codes (compute_adc=False), so the
+    # physical record drops the code rows — no dead DMA bytes per hop
+    rec_codes = (
+        nbr_codes[:, :, :0]
+        if cfg.memory_mode == MemoryMode.MEM_ALL
+        else nbr_codes
+    )
+
     return PageStore(
-        vecs=jnp.asarray(vecs),
+        vecs=vecs,
         member_count=jnp.asarray(member_count),
         nbr_ids=jnp.asarray(nbr_ids.astype(np.int32)),
-        nbr_codes=jnp.asarray(nbr_codes),
+        nbr_codes=nbr_codes,
         nbr_count=jnp.asarray(nbr_count),
+        recs=jnp.asarray(pack_page_records(vecs, rec_codes)),
         capacity=cap,
         dim=d,
         new_to_old=new_to_old,

@@ -5,23 +5,34 @@ Per query the loop maintains a :class:`BeamState`:
     ids in the reassigned space (page = id // capacity),
   * a visited-page bitmap (the paper's visited set V),
   * a running exact-distance result set (size-K),
-and per hop applies four pure transition functions:
+and per hop applies three pure transition functions:
 
-  ``select_batch``    pick up to b closest unvisited candidates on fresh
-                      pages — the I/O schedule for this hop,
-  ``score_members``   gather those page records in one batched read (the
-                      I/O unit; ``kernels.ops.page_gather_l2`` — scalar-
-                      prefetched page DMA on TPU, jnp oracle on CPU) and
-                      score every member vector exactly,
-  ``score_neighbors`` ADC-score the pages' external neighbors over on-page
-                      or in-memory PQ codes (``kernels.ops.pq_adc``),
-  ``merge``           fold both score sets into the beam and result top-k.
+  ``select_batch``      pick up to b closest unvisited candidates on fresh
+                        pages — the I/O schedule for this hop — as ONE
+                        vectorized pass: a single stable sort of the beam
+                        by (distance, slot) plus a first-occurrence-per-
+                        page mask, no serial argmin loop,
+  ``score_page_batch``  read those packed page records in one batched DMA
+                        (the I/O unit; ``kernels.ops.page_scan`` — scalar-
+                        prefetched page-record DMA on TPU, jnp oracle on
+                        CPU) and emit BOTH score sets from the single
+                        resident record: exact member L2 distances and
+                        neighbor ADC distances (on-page codes from the
+                        same record; in-memory codes via
+                        ``kernels.ops.pq_adc`` per the coordination mode),
+  ``merge``             fold both score sets into the beam and result
+                        top-k via ``jax.lax.top_k`` — no full sorts.
+
+The hot loop is argsort-free: merges use ``lax.top_k``, batch-local dedup
+is one ``lax.sort`` + segment-boundary mask, and beam-membership tests are
+sorted ``searchsorted`` probes instead of O(b*Rp*L) broadcasts.
 
 Everything is fixed-shape: the loop is a ``lax.while_loop``, queries are
 vmapped (``batch_search``) and optionally sharded over a device mesh
-(``shard_search``). I/O and cache-hit counters reproduce the paper's
-"Mean I/Os" metric. Later async-prefetch / cache-eviction work should
-extend the transition functions, not re-inline the loop.
+(``shard_search`` — pad rows carry ``valid=False`` and exit at hop 0).
+I/O and cache-hit counters reproduce the paper's "Mean I/Os" metric.
+Later async-prefetch / cache-eviction work should extend the transition
+functions, not re-inline the loop.
 """
 from __future__ import annotations
 
@@ -46,11 +57,11 @@ INF = jnp.inf
 class SearchData(NamedTuple):
     """All device arrays the search touches (a single pytree argument)."""
 
-    # disk tier (page records)
-    vecs: jnp.ndarray          # (P, cap, d)
+    # disk tier: packed page records (members + neighbor codes + counts in
+    # one (rows, 128) tile per page — see core.layout.pack_page_records)
+    page_recs: jnp.ndarray     # (P, rows, 128) f32
     member_count: jnp.ndarray  # (P,)
     nbr_ids: jnp.ndarray       # (P, Rp)
-    nbr_codes: jnp.ndarray     # (P, Rp, M_disk)
     nbr_count: jnp.ndarray     # (P,)
     # memory tier
     mem_codes: jnp.ndarray     # (N_pad, M_mem)
@@ -67,10 +78,9 @@ class SearchData(NamedTuple):
 
 def make_search_data(store: PageStore, tier: MemoryTier, lsh: LSHIndex) -> SearchData:
     return SearchData(
-        vecs=store.vecs,
+        page_recs=store.recs,
         member_count=store.member_count,
         nbr_ids=store.nbr_ids,
-        nbr_codes=store.nbr_codes,
         nbr_count=store.nbr_count,
         mem_codes=tier.mem_codes,
         mem_mask=tier.mem_mask,
@@ -107,12 +117,28 @@ class BeamState(NamedTuple):
 
 
 def _mask_dups_keep_first(ids: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
-    """Set distance to INF for duplicate ids (keeping one occurrence)."""
-    order = jnp.argsort(ids)
-    s = ids[order]
+    """Set distance to INF for duplicate ids (keeping the first occurrence).
+
+    One stable value sort of (ids, positions) + a segment-boundary compare;
+    duplicate flags are scattered back through the carried positions — no
+    argsort on the hot path.
+    """
+    n = ids.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    s, spos = jax.lax.sort((ids, pos), num_keys=1, is_stable=True)
     dup_sorted = jnp.concatenate([jnp.array([False]), s[1:] == s[:-1]])
-    dup = jnp.zeros_like(dup_sorted).at[order].set(dup_sorted)
+    dup = jnp.zeros((n,), bool).at[spos].set(dup_sorted)
     return jnp.where(dup & (ids != PAD), INF, d)
+
+
+def _top_k_merge(d: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Ascending top-k of a distance vector: (dists, indices).
+
+    ``lax.top_k`` breaks ties toward lower indices, matching a stable
+    ascending argsort — same selection, a fraction of the cost.
+    """
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
 
 
 # --------------------------------------------------------------------------
@@ -129,10 +155,10 @@ def init_state(
     entries: int,
 ) -> BeamState:
     """In-memory routing (Alg. 2 line 4, Fig. 6 step 1): LSH entry points."""
-    num_pages = data.vecs.shape[0]
+    num_pages = data.page_recs.shape[0]
     qcode = hash_codes(q[None], data.lsh_planes)[0]
     ham = ops.hamming(data.lsh_codes, qcode)
-    top = jnp.argsort(ham)[:entries]
+    _, top = _top_k_merge(ham.astype(jnp.float32), entries)
     entry_ids = data.lsh_ids[top].astype(jnp.int32)
     entry_d = ops.pq_adc(data.lsh_pq[top], disk_lut)
     entry_d = _mask_dups_keep_first(entry_ids, entry_d)
@@ -157,51 +183,103 @@ def select_batch(
 ) -> tuple[BeamState, jnp.ndarray]:
     """Pick up to b closest unvisited candidates whose pages are fresh.
 
-    Returns the updated state (candidates expanded, pages marked visited)
-    and the (b,) batch of page ids to read, PAD padded.
+    One vectorized pass replacing the seed's serial per-pick ``fori_loop``:
+    stable-sort the beam by (masked distance, slot), keep the first
+    occurrence of each page among finite entries, and take the first b —
+    exactly the pages the iterated argmin would have scheduled, in the same
+    order. Returns the updated state (selected candidates expanded, their
+    pages marked visited, candidates on stale pages retired) and the (b,)
+    batch of page ids to read, PAD padded.
     """
     cand_ids = state.cand_ids
-    batch = jnp.full((io_batch,), PAD, jnp.int32)
+    beam = cand_ids.shape[0]
+    num_pages = state.page_vis.shape[0]
+    b = io_batch
 
-    def pick(j, carry):
-        cand_vis, page_vis, batch = carry
-        # skip candidates whose page is already visited/scheduled
-        cpages = jnp.where(cand_ids >= 0, cand_ids // capacity, 0)
-        stale = (cand_ids != PAD) & page_vis[cpages]
-        cand_vis2 = cand_vis | stale
-        masked = jnp.where(cand_vis2 | (cand_ids == PAD), INF, state.cand_d)
-        slot = jnp.argmin(masked)
-        ok = jnp.isfinite(masked[slot])
-        cand_vis2 = cand_vis2.at[slot].set(True)
-        pid = jnp.where(ok, cand_ids[slot] // capacity, PAD)
-        page_vis = jnp.where(
-            ok, page_vis.at[jnp.maximum(pid, 0)].set(True), page_vis
-        )
-        batch = batch.at[j].set(pid)
-        return cand_vis2, page_vis, batch
-
-    cand_vis, page_vis, batch = jax.lax.fori_loop(
-        0, io_batch, pick, (state.cand_vis, state.page_vis, batch)
+    cpages = jnp.where(cand_ids >= 0, cand_ids // capacity, 0)
+    # retire candidates whose page was visited before this hop
+    stale = (cand_ids != PAD) & state.page_vis[cpages]
+    masked = jnp.where(
+        state.cand_vis | stale | (cand_ids == PAD), INF, state.cand_d
     )
+
+    slot = jnp.arange(beam, dtype=jnp.int32)
+    sd, sslot = jax.lax.sort((masked, slot), num_keys=1, is_stable=True)
+    spages = cpages[sslot]
+    finite = jnp.isfinite(sd)
+    # first finite occurrence of each page in (distance, slot) order
+    earlier_same = (
+        (spages[:, None] == spages[None, :])
+        & (slot[None, :] < slot[:, None])      # strictly earlier sorted pos
+        & finite[None, :]
+    ).any(1)
+    first = finite & ~earlier_same
+    rank = jnp.cumsum(first) - first           # fresh pages scheduled before
+    scheduled = first & (rank < b)
+    n_sched = scheduled.sum()
+
+    batch = (
+        jnp.full((b,), PAD, jnp.int32)
+        .at[jnp.where(scheduled, rank, b)]
+        .set(spages.astype(jnp.int32), mode="drop")
+    )
+    page_vis = state.page_vis.at[
+        jnp.where(scheduled, spages, num_pages)
+    ].set(True, mode="drop")
+
+    # expanded flags: the b scheduled picks, plus co-page candidates of any
+    # page scheduled before the final pick (the serial loop's stale marking
+    # ran once more after each pick except the last)
+    early_pv = (
+        jnp.zeros_like(state.page_vis)
+        .at[jnp.where(scheduled & (rank < b - 1), spages, num_pages)]
+        .set(True, mode="drop")
+    )
+    cand_vis = state.cand_vis | stale
+    cand_vis = cand_vis.at[jnp.where(scheduled, sslot, beam)].set(
+        True, mode="drop"
+    )
+    cand_vis = cand_vis | ((cand_ids != PAD) & early_pv[cpages])
+    # the serial argmin marked slot 0 on every exhausted pick (all-INF mask)
+    cand_vis = cand_vis.at[0].set(cand_vis[0] | (n_sched < b))
     return state._replace(cand_vis=cand_vis, page_vis=page_vis), batch
 
 
-def score_members(
-    q: jnp.ndarray, data: SearchData, batch: jnp.ndarray, *, capacity: int
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Batched page read (Fig. 6 step 2, THE I/O) + exact member scoring.
+def score_page_batch(
+    q: jnp.ndarray,
+    data: SearchData,
+    batch: jnp.ndarray,
+    state: BeamState,
+    disk_lut: jnp.ndarray,
+    mem_lut: jnp.ndarray | None,
+    *,
+    capacity: int,
+    mode: str,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Batched page-record read (Fig. 6 steps 2-4, THE I/O) -> both score
+    sets from one DMA per page.
 
-    The gather-and-score is one ``kernels.ops.page_gather_l2`` call: on TPU
-    the (b,) page ids are scalar-prefetched and each page record arrives as
-    one aligned HBM->VMEM DMA; on CPU the jnp oracle runs. Returns
-    (member_ids, member_dists) flattened to (b*cap,), plus this hop's
-    disk-I/O and cache-hit deltas.
+    ``kernels.ops.page_scan`` scalar-prefetches the (b,) page ids and, per
+    grid step, DMAs ONE packed record (members + neighbor codes + counts)
+    HBM->VMEM, emitting exact member L2 distances and on-page neighbor ADC
+    distances from the same resident block. MEM_ALL skips the on-page ADC
+    (``compute_adc=False``) and HYBRID/MEM_ALL re-score covered neighbors
+    with the finer in-memory codes via ``kernels.ops.pq_adc``.
+
+    Returns (member_ids, member_dists) flattened to (b*cap,),
+    (neighbor_ids, estimated_dists) flattened to (b*Rp,) and INF-masked,
+    plus this hop's disk-I/O and cache-hit deltas.
     """
-    cap = data.vecs.shape[1]
+    cap = capacity
+    rp = data.nbr_ids.shape[1]
     safe = jnp.maximum(batch, 0)
     fetched = batch >= 0
 
-    ex = ops.page_gather_l2(data.vecs, safe, q)            # (b, cap)
+    ex, est_disk = ops.page_scan(
+        data.page_recs, safe, q, disk_lut,
+        capacity=cap, dim=q.shape[0], rp=rp,
+        compute_adc=mode != MemoryMode.MEM_ALL.value,
+    )
     slots = jnp.arange(cap)[None, :]
     ex = jnp.where(slots < data.member_count[safe][:, None], ex, INF)
     ex = jnp.where(fetched[:, None], ex, INF)
@@ -216,56 +294,34 @@ def score_members(
         in_cache = jnp.zeros_like(fetched)
     io_delta = (fetched & ~in_cache).sum().astype(jnp.int32)
     hit_delta = (fetched & in_cache).sum().astype(jnp.int32)
-    return member_ids.ravel(), ex.ravel(), io_delta, hit_delta
 
-
-def score_neighbors(
-    data: SearchData,
-    batch: jnp.ndarray,
-    state: BeamState,
-    disk_lut: jnp.ndarray,
-    mem_lut: jnp.ndarray,
-    *,
-    capacity: int,
-    mode: str,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Estimated distances for the fetched pages' external neighbors
-    (Fig. 6 steps 3-4) via ADC (``kernels.ops.pq_adc``) over on-page or
-    in-memory PQ codes per the memory-disk coordination mode. Returns
-    (neighbor_ids, estimated_dists) flattened to (b*Rp,), INF-masked."""
-    rp = data.nbr_ids.shape[1]
-    safe = jnp.maximum(batch, 0)
-    fetched = batch >= 0
+    # neighbor estimates (Fig. 6 steps 3-4) per the coordination mode
     page_nids = data.nbr_ids[safe]                          # (b, Rp)
-    page_ncodes = data.nbr_codes[safe]                      # (b, Rp, M_disk)
-    page_nc = data.nbr_count[safe]
-
     flat_nids = page_nids.reshape(-1)                       # (b*Rp,)
     valid_n = (
-        (jnp.arange(rp)[None, :] < page_nc[:, None]).reshape(-1)
+        (jnp.arange(rp)[None, :] < data.nbr_count[safe][:, None]).reshape(-1)
         & (flat_nids != PAD)
         & fetched.repeat(rp)
     )
     safe_nids = jnp.maximum(flat_nids, 0)
-    est_disk = ops.pq_adc(
-        page_ncodes.reshape(-1, page_ncodes.shape[-1]), disk_lut
-    )
     if mode == MemoryMode.DISK_ONLY.value:
-        est = est_disk
+        est = est_disk.reshape(-1)
     elif mode == MemoryMode.MEM_ALL.value:
         est = ops.pq_adc(data.mem_codes[safe_nids], mem_lut)
     else:  # HYBRID: prefer the higher-accuracy in-memory codes
         est_mem = ops.pq_adc(data.mem_codes[safe_nids], mem_lut)
-        est = jnp.where(data.mem_mask[safe_nids], est_mem, est_disk)
+        est = jnp.where(data.mem_mask[safe_nids], est_mem, est_disk.reshape(-1))
     est = jnp.where(valid_n, est, INF)
     # skip neighbors on already-visited pages
     est = jnp.where(state.page_vis[safe_nids // capacity], INF, est)
-    # skip neighbors already in the candidate set
-    dup_in_cand = (flat_nids[:, None] == state.cand_ids[None, :]).any(1)
-    est = jnp.where(dup_in_cand, INF, est)
+    # skip neighbors already in the candidate set: sorted membership probe
+    sorted_cand = jnp.sort(state.cand_ids)
+    pos = jnp.searchsorted(sorted_cand, flat_nids)
+    pos = jnp.minimum(pos, sorted_cand.shape[0] - 1)
+    est = jnp.where(sorted_cand[pos] == flat_nids, INF, est)
     # dedupe within this batch
     est = _mask_dups_keep_first(flat_nids, est)
-    return flat_nids, est
+    return member_ids.ravel(), ex.ravel(), flat_nids, est, io_delta, hit_delta
 
 
 def merge(
@@ -278,24 +334,25 @@ def merge(
     hit_delta: jnp.ndarray,
 ) -> BeamState:
     """Fold exact member scores into the result top-k and estimated
-    neighbor scores into the beam (Alg. 2 line 12, Fig. 6 step 5)."""
+    neighbor scores into the beam (Alg. 2 line 12, Fig. 6 step 5) —
+    ``lax.top_k`` selections, no full argsort merges."""
     k = state.res_ids.shape[0]
     beam = state.cand_ids.shape[0]
 
     all_rd = jnp.concatenate([state.res_d, member_d])
     all_ri = jnp.concatenate([state.res_ids, member_ids])
-    order = jnp.argsort(all_rd)[:k]
-    res_d, res_ids = all_rd[order], all_ri[order]
+    res_d, order = _top_k_merge(all_rd, k)
+    res_ids = all_ri[order]
 
     all_ci = jnp.concatenate([state.cand_ids, nbr_ids])
     all_cd = jnp.concatenate([state.cand_d, nbr_d])
     all_cv = jnp.concatenate(
         [state.cand_vis, jnp.zeros(nbr_ids.shape, bool)]
     )
-    order = jnp.argsort(all_cd)[:beam]
+    cand_d, order = _top_k_merge(all_cd, beam)
     return state._replace(
         cand_ids=all_ci[order],
-        cand_d=all_cd[order],
+        cand_d=cand_d,
         cand_vis=all_cv[order],
         res_ids=res_ids,
         res_d=res_d,
@@ -307,6 +364,7 @@ def merge(
 
 def _search_one(
     q: jnp.ndarray,
+    valid: jnp.ndarray,
     data: SearchData,
     *,
     capacity: int,
@@ -318,7 +376,12 @@ def _search_one(
     mode: str,
 ):
     disk_lut = pq_mod.pq_lut(q, data.disk_codebooks)  # (M_disk, ksub)
-    mem_lut = pq_mod.pq_lut(q, data.mem_codebooks)    # (M_mem, ksub)
+    # the finer in-memory LUT is dead weight in DISK_ONLY mode — skip it
+    mem_lut = (
+        pq_mod.pq_lut(q, data.mem_codebooks)          # (M_mem, ksub)
+        if mode != MemoryMode.DISK_ONLY.value
+        else None
+    )
     state = init_state(q, data, disk_lut, beam=beam, k=k, entries=entries)
 
     def cond(state: BeamState):
@@ -327,17 +390,14 @@ def _search_one(
             & (state.cand_ids != PAD)
             & jnp.isfinite(state.cand_d)
         )
-        return live.any() & (state.hops < max_hops)
+        return live.any() & (state.hops < max_hops) & valid
 
     def body(state: BeamState):
         state, batch = select_batch(
             state, capacity=capacity, io_batch=io_batch
         )
-        mids, md, io_delta, hit_delta = score_members(
-            q, data, batch, capacity=capacity
-        )
-        nids, nd = score_neighbors(
-            data, batch, state, disk_lut, mem_lut,
+        mids, md, nids, nd, io_delta, hit_delta = score_page_batch(
+            q, data, batch, state, disk_lut, mem_lut,
             capacity=capacity, mode=mode,
         )
         return merge(state, mids, md, nids, nd, io_delta, hit_delta)
@@ -349,6 +409,7 @@ def _search_one(
 def _batch_search_impl(
     queries: jnp.ndarray,
     data: SearchData,
+    valid: jnp.ndarray,
     *,
     capacity: int,
     beam: int,
@@ -369,17 +430,20 @@ def _batch_search_impl(
         entries=entries,
         mode=mode,
     )
-    ids, dists, ios, hops, hits = jax.vmap(fn)(queries)
+    ids, dists, ios, hops, hits = jax.vmap(fn)(queries, valid)
     return SearchResult(ids=ids, dists=dists, ios=ios, hops=hops, cache_hits=hits)
 
 
-batch_search = jax.jit(
-    _batch_search_impl,
+@functools.partial(
+    jax.jit,
     static_argnames=(
         "capacity", "beam", "io_batch", "k", "max_hops", "entries", "mode"
     ),
 )
-batch_search.__doc__ = """Search a batch of queries. queries: (Q, d)."""
+def batch_search(queries: jnp.ndarray, data: SearchData, **kw) -> SearchResult:
+    """Search a batch of queries. queries: (Q, d)."""
+    valid = jnp.ones((queries.shape[0],), bool)
+    return _batch_search_impl(queries, data, valid, **kw)
 
 
 # --------------------------------------------------------------------------
@@ -412,7 +476,7 @@ def _shard_search_fn(
     fn = compat.shard_map(
         local,
         mesh=mesh,
-        in_specs=(P(axes), data_spec),
+        in_specs=(P(axes), data_spec, P(axes)),
         out_specs=P(axes),
     )
     return jax.jit(fn)
@@ -436,11 +500,13 @@ def shard_search(
     The index (``data``) is replicated on every device; the (Q, d) query
     batch is split over all mesh axes — the paper's "query threads"
     throughput dimension mapped onto chips. Ragged batches are zero-padded
-    to a multiple of the mesh size and trimmed from the result. On a
-    1-device mesh this runs the exact ``_batch_search_impl`` trace, so ids
-    and distances are bitwise identical to ``batch_search``. (Index
-    sharding — partitioning the vectors themselves — is the orthogonal
-    axis and lives in ``core.distributed``.)
+    to a multiple of the mesh size; the pad rows carry ``valid=False`` so
+    their while_loop exits at hop 0 (no wasted full searches) and are
+    trimmed from the result. On a 1-device mesh with no padding this runs
+    the exact ``_batch_search_impl`` trace, so ids and distances are
+    bitwise identical to ``batch_search``. (Index sharding — partitioning
+    the vectors themselves — is the orthogonal axis and lives in
+    ``core.distributed``.)
     """
     if mesh is None:
         from repro.launch.mesh import make_host_mesh
@@ -454,11 +520,13 @@ def shard_search(
         num_dev *= n
     qn = queries.shape[0]
     pad = (-qn) % num_dev
+    valid = jnp.ones((qn,), bool)
     if pad:
         queries = jnp.concatenate(
             [queries, jnp.zeros((pad, queries.shape[1]), queries.dtype)]
         )
-    res = fn(queries, data)
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+    res = fn(queries, data, valid)
     if pad:
         res = jax.tree.map(lambda a: a[:qn], res)
     return res

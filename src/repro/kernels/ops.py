@@ -2,9 +2,14 @@
 
 The search path calls these; on this CPU container they resolve to the
 oracles (fast under XLA:CPU), while tests force ``impl='pallas'`` with
-interpret=True to validate the TPU kernels themselves.
+interpret=True to validate the TPU kernels themselves. The backend probe
+is resolved once per process (``_backend``) instead of re-querying
+``jax.default_backend()`` on every hot-path dispatch; tests still override
+the choice explicitly via ``impl=``.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -12,31 +17,38 @@ import jax.numpy as jnp
 from repro.kernels import hamming as hamming_k
 from repro.kernels import l2dist as l2_k
 from repro.kernels import page_gather as pg_k
+from repro.kernels import page_scan as ps_k
 from repro.kernels import pq_adc as adc_k
 from repro.kernels import ref
 
 
+@functools.cache
+def _backend() -> str:
+    return jax.default_backend()
+
+
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return _backend() == "tpu"
+
+
+def _resolve(impl: str | None) -> str:
+    return impl or ("pallas" if _on_tpu() else "ref")
 
 
 def l2_distance(q, x, *, impl: str | None = None, interpret: bool = False):
-    use = impl or ("pallas" if _on_tpu() else "ref")
-    if use == "pallas":
+    if _resolve(impl) == "pallas":
         return l2_k.l2_distance(q, x, interpret=interpret or not _on_tpu())
     return ref.l2_distance_ref(q, x)
 
 
 def pq_adc(codes, lut, *, impl: str | None = None, interpret: bool = False):
-    use = impl or ("pallas" if _on_tpu() else "ref")
-    if use == "pallas":
+    if _resolve(impl) == "pallas":
         return adc_k.pq_adc(codes, lut, interpret=interpret or not _on_tpu())
     return ref.pq_adc_ref(codes, lut)
 
 
 def hamming(codes, qcode, *, impl: str | None = None, interpret: bool = False):
-    use = impl or ("pallas" if _on_tpu() else "ref")
-    if use == "pallas":
+    if _resolve(impl) == "pallas":
         return hamming_k.hamming(
             codes, qcode, interpret=interpret or not _on_tpu()
         )
@@ -45,9 +57,24 @@ def hamming(codes, qcode, *, impl: str | None = None, interpret: bool = False):
 
 def page_gather_l2(pages, page_ids, q, *, impl: str | None = None,
                    interpret: bool = False):
-    use = impl or ("pallas" if _on_tpu() else "ref")
-    if use == "pallas":
+    if _resolve(impl) == "pallas":
         return pg_k.page_gather_l2(
             pages, page_ids, q, interpret=interpret or not _on_tpu()
         )
     return ref.page_gather_l2_ref(pages, page_ids, q)
+
+
+def page_scan(recs, page_ids, q, lut, *, capacity: int, dim: int, rp: int,
+              compute_adc: bool = True, impl: str | None = None,
+              interpret: bool = False):
+    """Fused per-page scan: one record DMA -> (member L2, neighbor ADC)."""
+    if _resolve(impl) == "pallas":
+        return ps_k.page_scan(
+            recs, page_ids, q, lut,
+            capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+            interpret=interpret or not _on_tpu(),
+        )
+    return ref.page_scan_ref(
+        recs, page_ids, q, lut,
+        capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+    )

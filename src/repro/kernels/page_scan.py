@@ -1,0 +1,189 @@
+"""Pallas TPU kernel: fused page scan — one DMA per page record, both score
+sets.
+
+PageANN's contract is that one graph hop costs exactly one aligned unit of
+bulk data movement per page. The seed loop honored that on paper but read
+each page record twice: ``page_gather_l2`` DMA'd the member vectors, then a
+separate jnp gather re-fetched the same pages' neighbor PQ codes. This
+kernel restores the invariant literally: the (b,) page-id batch selected by
+Alg. 2 is *scalar-prefetched* into SMEM, and grid step i DMAs the whole
+packed record of page ``ids[i]`` — member vectors, transposed neighbor
+codes, and counts, one (rows, 128)-lane tile built by
+``core.layout.pack_page_records`` mirroring the paper's on-page layout —
+HBM->VMEM exactly once. From that single resident block it emits
+
+  * exact member L2 distances  (VPU reduction over the member rows), and
+  * neighbor ADC distances     (per-subspace one-hot MXU contraction against
+    the query LUT, the gather-free trick from ``pq_adc.py``),
+
+so one page == one DMA == both score sets. Double buffering of the next
+record against the current block's compute falls out of Pallas' pipeline
+emitter — the TPU analogue of the paper's Linux-AIO I/O-computation overlap.
+
+Record layout (f32 lanes; arithmetic owned by ``kernels.record_layout``,
+packed by ``core.layout.pack_page_records`` — ``vpr = 128 // d`` member
+vectors per row for d <= 128, ``rpv = ceil(d / 128)`` rows per vector for
+d > 128):
+  rows [0, Rv)         member vectors, densely packed; Rv = member_rows
+  rows [Rv, Rv+M)      neighbor PQ codes, subspace-major: row Rv+j holds
+                       code j of neighbors 0..Rp-1 in cols [0, Rp)
+  (rows padded to a multiple of 8 so the tile is (8, 128)-aligned)
+
+Neighbor *ids* and the member/neighbor counts are not scored, so they ride
+small int side arrays in ``SearchData`` rather than wasting f32 lanes here.
+
+The transposed code block is what makes the ADC MXU-friendly: subspace j's
+codes sit in one lane vector, so each of the M one-hot contractions is a
+(1, K) x (K, 128) matmul with no in-kernel transpose or sub-lane gather.
+The member rows score against a vpr-times-tiled query, so the dense packing
+costs one segment-sum reshape, not a gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.record_layout import (
+    PAGE_LANES as LANES,
+    member_rows as _member_rows,
+    rows_per_vector as _rpv,
+    vectors_per_row as _vpr,
+)
+
+
+def _member_l2(rec, qt, cap, dim):
+    """(1, rows, 128) record + (qrows, 128) tiled query -> (1, cap).
+
+    d <= 128: vpr vectors per row, qt is the query tiled vpr times across
+    one row's lanes. d > 128: each vector spans rpv rows, qt is the query
+    laid out over rpv rows; the segment sum folds rows back per vector.
+    """
+    rv = _member_rows(cap, dim)
+    if dim <= LANES:
+        vpr = _vpr(dim)
+        diff = rec[0, :rv, :] - qt                     # (Rv, 128)
+        sq = diff * diff
+        seg = sq[:, : vpr * dim].reshape(rv, vpr, dim).sum(-1)  # (Rv, vpr)
+        return seg.reshape(rv * vpr)[:cap][None, :]
+    rpv = _rpv(dim)
+    diff = rec[0, :rv, :] - jnp.tile(qt, (cap, 1))     # (cap*rpv, 128)
+    sq = (diff * diff).sum(-1)                         # (cap*rpv,)
+    return sq.reshape(cap, rpv).sum(-1)[None, :]
+
+
+def _neighbor_adc(rec, lut, row0, m):
+    """One-hot MXU contraction over the transposed code rows -> (1, 128)."""
+    ksub = lut.shape[1]
+    acc = jnp.zeros((1, LANES), jnp.float32)
+    for j in range(m):
+        codes_j = rec[0, row0 + j : row0 + j + 1, :].astype(jnp.int32)  # (1,128)
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (ksub, LANES), 0)
+        onehot = (iota_k == codes_j).astype(jnp.float32)                # (K,128)
+        acc = acc + jax.lax.dot_general(
+            lut[j : j + 1, :], onehot,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    return acc
+
+
+def _page_scan_kernel(ids_ref, recs_ref, q_ref, lut_ref, md_ref, nd_ref,
+                      *, cap, dim, m):
+    del ids_ref  # consumed by the index_map (scalar prefetch)
+    rec = recs_ref[...].astype(jnp.float32)
+    qt = q_ref[...].astype(jnp.float32)
+    md_ref[...] = _member_l2(rec, qt, cap, dim)
+    nd_ref[...] = _neighbor_adc(
+        rec, lut_ref[...].astype(jnp.float32), _member_rows(cap, dim), m
+    )
+
+
+def _page_scan_members_kernel(ids_ref, recs_ref, q_ref, md_ref, *, cap, dim):
+    del ids_ref
+    rec = recs_ref[...].astype(jnp.float32)
+    md_ref[...] = _member_l2(rec, q_ref[...].astype(jnp.float32), cap, dim)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "dim", "rp", "compute_adc", "interpret")
+)
+def page_scan(
+    recs: jnp.ndarray,
+    page_ids: jnp.ndarray,
+    q: jnp.ndarray,
+    lut: jnp.ndarray,
+    *,
+    capacity: int,
+    dim: int,
+    rp: int,
+    compute_adc: bool = True,
+    interpret: bool = False,
+):
+    """recs: (P, rows, 128) packed page records, page_ids: (b,) int32 in
+    [0, P), q: (d,), lut: (M_disk, K) f32 query LUT.
+
+    -> (member_d (b, capacity) f32, nbr_d (b, rp) f32 or None)
+
+    ``compute_adc=False`` (MEM_ALL mode: neighbor codes live in the memory
+    tier) skips the ADC contraction entirely and returns ``nbr_d=None``.
+    """
+    p, rows, lanes = recs.shape
+    assert lanes == LANES and rp <= LANES
+    b = page_ids.shape[0]
+    m = lut.shape[0]
+    if dim <= LANES:
+        vpr = _vpr(dim)
+        qt = jnp.zeros((1, LANES), jnp.float32).at[0, : vpr * dim].set(
+            jnp.tile(q.astype(jnp.float32), vpr)
+        )
+    else:
+        rpv = _rpv(dim)
+        qt = (
+            jnp.zeros((rpv * LANES,), jnp.float32)
+            .at[:dim].set(q.astype(jnp.float32))
+            .reshape(rpv, LANES)
+        )
+    rec_spec = pl.BlockSpec((1, rows, lanes), lambda i, ids: (ids[i], 0, 0))
+    q_spec = pl.BlockSpec(qt.shape, lambda i, ids: (0, 0))
+    if not compute_adc:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b,),
+            in_specs=[rec_spec, q_spec],
+            out_specs=pl.BlockSpec((1, capacity), lambda i, ids: (i, 0)),
+        )
+        md = pl.pallas_call(
+            functools.partial(_page_scan_members_kernel, cap=capacity, dim=dim),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, capacity), jnp.float32),
+            interpret=interpret,
+        )(page_ids.astype(jnp.int32), recs, qt)
+        return md, None
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            rec_spec,
+            q_spec,
+            pl.BlockSpec(lut.shape, lambda i, ids: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, capacity), lambda i, ids: (i, 0)),
+            pl.BlockSpec((1, LANES), lambda i, ids: (i, 0)),
+        ],
+    )
+    md, nd = pl.pallas_call(
+        functools.partial(_page_scan_kernel, cap=capacity, dim=dim, m=m),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, capacity), jnp.float32),
+            jax.ShapeDtypeStruct((b, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_ids.astype(jnp.int32), recs, qt, lut.astype(jnp.float32))
+    return md, nd[:, :rp]

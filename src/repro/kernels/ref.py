@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import record_layout
+
 
 def l2_distance_ref(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """Squared L2 distances. q: (Bq, d), x: (Nx, d) -> (Bq, Nx) f32."""
@@ -51,3 +53,45 @@ def page_gather_l2_ref(
     gathered = pages[page_ids]                         # (b, cap, d)
     diff = gathered.astype(jnp.float32) - q.astype(jnp.float32)[None, None, :]
     return (diff * diff).sum(-1)
+
+
+def page_scan_ref(
+    recs: jnp.ndarray,
+    page_ids: jnp.ndarray,
+    q: jnp.ndarray,
+    lut: jnp.ndarray,
+    *,
+    capacity: int,
+    dim: int,
+    rp: int,
+    compute_adc: bool = True,
+):
+    """Fused page scan: one packed-record gather, both score sets.
+
+    recs: (P, rows, 128) f32 packed page records (see
+    ``core.layout.pack_page_records``), page_ids: (b,) int32 (>=0),
+    q: (d,), lut: (M_disk, K) f32.
+    -> (member_d (b, capacity) f32, nbr_d (b, rp) f32 or None).
+    """
+    b = page_ids.shape[0]
+    rv = record_layout.member_rows(capacity, dim)
+    if dim <= record_layout.PAGE_LANES:
+        vpr = record_layout.vectors_per_row(dim)
+        block = recs[page_ids, :rv, : vpr * dim]       # (b, Rv, vpr*d)
+        vecs = block.reshape(b, rv * vpr, dim)[:, :capacity]
+    else:
+        rpv = record_layout.rows_per_vector(dim)
+        block = recs[page_ids, :rv, :]                 # (b, cap*rpv, 128)
+        vecs = block.reshape(b, capacity, rpv * record_layout.PAGE_LANES)[
+            :, :, :dim
+        ]
+    diff = vecs.astype(jnp.float32) - q.astype(jnp.float32)[None, None, :]
+    member_d = (diff * diff).sum(-1)
+    if not compute_adc:
+        return member_d, None
+    m = lut.shape[0]
+    # subspace-major code rows: row Rv+j holds code j of every neighbor
+    codes = recs[page_ids, rv:rv + m, :rp].astype(jnp.int32)
+    rows = jnp.arange(m)[None, :, None]                # (1, M, 1)
+    nbr_d = lut[rows, codes].astype(jnp.float32).sum(1)  # (b, rp)
+    return member_d, nbr_d

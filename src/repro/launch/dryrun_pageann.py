@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import MemoryMode, PageANNConfig
 from repro.core import distributed as dist
+from repro.core import layout as layout_mod
 from repro.core import search as search_mod
 from repro.launch import roofline as rf
 from repro.launch.mesh import make_production_mesh
@@ -43,11 +44,13 @@ def synthetic_sharded_specs(cfg: PageANNConfig, num_shards: int):
     rp, m = cfg.page_degree, cfg.pq_subspaces
     m_mem = 2 * m
     s = num_shards
+    # MEM_ALL records carry no on-page code rows (codes live in memory)
+    m_rec = 0 if cfg.memory_mode == MemoryMode.MEM_ALL else m
+    rec_rows = layout_mod.record_rows(cap, DIM, m_rec)
     data = search_mod.SearchData(
-        vecs=SDS((s, pages, cap, DIM), jnp.float32),
+        page_recs=SDS((s, pages, rec_rows, layout_mod.PAGE_LANES), jnp.float32),
         member_count=SDS((s, pages), jnp.int32),
         nbr_ids=SDS((s, pages, rp), jnp.int32),
-        nbr_codes=SDS((s, pages, rp, m), jnp.uint8),
         nbr_count=SDS((s, pages), jnp.int32),
         mem_codes=SDS((s, n_pad, m_mem), jnp.uint8),
         mem_mask=SDS((s, n_pad), jnp.bool_),

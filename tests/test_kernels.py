@@ -1,62 +1,119 @@
-"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
-swept over shapes and dtypes (hypothesis)."""
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle.
+
+Seeded sweeps always run; the hypothesis shape/dtype property sweeps ride
+along when hypothesis is installed.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property sweeps skip cleanly without it
-from hypothesis import given, settings, strategies as st
 
+from repro.core.layout import pack_page_records
 from repro.kernels import ref
 from repro.kernels.hamming import hamming
 from repro.kernels.l2dist import l2_distance
 from repro.kernels.page_gather import page_gather_l2
+from repro.kernels.page_scan import page_scan
 from repro.kernels.pq_adc import pq_adc
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 SET = dict(max_examples=12, deadline=None)
 
 
-@settings(**SET)
-@given(
-    bq=st.integers(1, 70),
-    nx=st.integers(1, 300),
-    d=st.sampled_from([8, 32, 96, 128]),
-    dtype=st.sampled_from([np.float32, np.float16]),
+# ------------------------------------------------------------- page_scan
+def _random_page_record(rng, p, cap, d, rp, m):
+    """Random page arrays + their packed (P, rows, 128) record."""
+    vecs = rng.standard_normal((p, cap, d)).astype(np.float32)
+    codes = rng.integers(0, 256, (p, rp, m)).astype(np.uint8)
+    recs = pack_page_records(vecs, codes)
+    return vecs, codes, recs
+
+
+@pytest.mark.parametrize(
+    "p,cap,d,rp,m,b",
+    [
+        (7, 4, 16, 12, 4, 3),
+        (23, 28, 32, 48, 8, 5),    # the serve-benchmark geometry
+        (11, 5, 128, 48, 16, 8),   # d == full lane width
+        (3, 1, 8, 1, 4, 1),
+        (5, 3, 200, 12, 4, 4),     # d > 128: vectors span 2 record rows
+        (4, 6, 384, 16, 8, 2),     # sentence-transformer-sized embeddings
+    ],
 )
-def test_l2_distance_matches_ref(bq, nx, d, dtype):
-    rng = np.random.default_rng(bq * 1000 + nx)
-    q = jnp.asarray(rng.standard_normal((bq, d)).astype(dtype))
-    x = jnp.asarray(rng.standard_normal((nx, d)).astype(dtype))
+def test_page_scan_matches_ref_and_semantics(p, cap, d, rp, m, b):
+    """Pallas fused kernel (interpret) == jnp oracle == the unfused pair of
+    semantic ground truths it replaced (member L2 + neighbor ADC)."""
+    rng = np.random.default_rng(p * 100 + cap)
+    vecs, codes, recs = _random_page_record(rng, p, cap, d, rp, m)
+    ids = jnp.asarray(rng.integers(0, p, (b,)), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    lut = jnp.asarray(rng.standard_normal((m, 256)), jnp.float32)
+    recs_j = jnp.asarray(recs)
+
+    md_k, nd_k = page_scan(
+        recs_j, ids, q, lut, capacity=cap, dim=d, rp=rp, interpret=True
+    )
+    md_r, nd_r = ref.page_scan_ref(
+        recs_j, ids, q, lut, capacity=cap, dim=d, rp=rp
+    )
+    np.testing.assert_allclose(np.asarray(md_k), np.asarray(md_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(nd_k), np.asarray(nd_r), rtol=1e-4, atol=1e-4)
+
+    # ground truth from the unfused seed path
+    md_t = ref.page_gather_l2_ref(jnp.asarray(vecs), ids, q)
+    flat = jnp.asarray(codes)[ids].reshape(-1, m)
+    nd_t = ref.pq_adc_ref(flat, lut).reshape(b, rp)
+    np.testing.assert_allclose(np.asarray(md_k), np.asarray(md_t), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(nd_k), np.asarray(nd_t), rtol=1e-4, atol=1e-4)
+
+
+def test_page_scan_members_only_skips_adc():
+    """compute_adc=False (MEM_ALL: codes live in the memory tier) returns
+    member distances only, identical to the full kernel's member output."""
+    rng = np.random.default_rng(5)
+    _, _, recs = _random_page_record(rng, 9, 6, 24, 10, 8)
+    recs = jnp.asarray(recs)
+    ids = jnp.asarray(rng.integers(0, 9, (4,)), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((24,)), jnp.float32)
+    lut = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+    md_full, _ = page_scan(
+        recs, ids, q, lut, capacity=6, dim=24, rp=10, interpret=True
+    )
+    md_only, nd = page_scan(
+        recs, ids, q, lut, capacity=6, dim=24, rp=10,
+        compute_adc=False, interpret=True,
+    )
+    assert nd is None
+    np.testing.assert_allclose(np.asarray(md_only), np.asarray(md_full), rtol=1e-5)
+    md_ref, nd_ref = ref.page_scan_ref(
+        recs, ids, q, lut, capacity=6, dim=24, rp=10, compute_adc=False
+    )
+    assert nd_ref is None
+    np.testing.assert_allclose(np.asarray(md_only), np.asarray(md_ref), rtol=1e-5)
+
+
+# ---------------------------------------------------- seeded kernel sweeps
+def test_l2_distance_matches_ref_seeded():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((5, 32)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((37, 32)), jnp.float32)
     out = l2_distance(q, x, interpret=True)
     want = ref.l2_distance_ref(q, x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-2, rtol=2e-2)
 
 
-@settings(**SET)
-@given(
-    n=st.integers(1, 600),
-    m=st.sampled_from([4, 8, 16]),
-    k=st.sampled_from([16, 256]),
-)
-def test_pq_adc_matches_ref(n, m, k):
-    rng = np.random.default_rng(n)
-    codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
-    lut = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+def test_pq_adc_matches_ref_seeded():
+    rng = np.random.default_rng(2)
+    codes = jnp.asarray(rng.integers(0, 256, (130, 8)), jnp.uint8)
+    lut = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
     out = pq_adc(codes, lut, interpret=True)
     want = ref.pq_adc_ref(codes, lut)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
-
-
-@settings(**SET)
-@given(s=st.integers(1, 700), w=st.sampled_from([1, 2, 4]))
-def test_hamming_matches_ref(s, w):
-    rng = np.random.default_rng(s)
-    codes = jnp.asarray(
-        rng.integers(0, 2**32, (s, w), dtype=np.uint64).astype(np.uint32)
-    )
-    qc = jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint64).astype(np.uint32))
-    out = hamming(codes, qc, interpret=True)
-    want = ref.hamming_ref(codes, qc)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
 
 
 def test_hamming_zero_distance_to_self():
@@ -65,18 +122,11 @@ def test_hamming_zero_distance_to_self():
     assert int(np.asarray(out)[2]) == 0
 
 
-@settings(**SET)
-@given(
-    p=st.integers(2, 40),
-    cap=st.sampled_from([4, 8, 16]),
-    d=st.sampled_from([16, 64]),
-    b=st.integers(1, 12),
-)
-def test_page_gather_l2_matches_ref(p, cap, d, b):
-    rng = np.random.default_rng(p * 7 + b)
-    pages = jnp.asarray(rng.standard_normal((p, cap, d)), jnp.float32)
-    ids = jnp.asarray(rng.integers(0, p, (b,)), jnp.int32)
-    q = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+def test_page_gather_l2_matches_ref_seeded():
+    rng = np.random.default_rng(3)
+    pages = jnp.asarray(rng.standard_normal((13, 8, 16)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 13, (6,)), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((16,)), jnp.float32)
     out = page_gather_l2(pages, ids, q, interpret=True)
     want = ref.page_gather_l2_ref(pages, ids, q)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
@@ -93,3 +143,101 @@ def test_ops_dispatch_to_ref_on_cpu():
         np.asarray(ref.l2_distance_ref(q, x)),
         rtol=1e-5,
     )
+
+
+# -------------------------------------------------- hypothesis properties
+if HAVE_HYPOTHESIS:
+
+    @settings(**SET)
+    @given(
+        bq=st.integers(1, 70),
+        nx=st.integers(1, 300),
+        d=st.sampled_from([8, 32, 96, 128]),
+        dtype=st.sampled_from([np.float32, np.float16]),
+    )
+    def test_l2_distance_matches_ref(bq, nx, d, dtype):
+        rng = np.random.default_rng(bq * 1000 + nx)
+        q = jnp.asarray(rng.standard_normal((bq, d)).astype(dtype))
+        x = jnp.asarray(rng.standard_normal((nx, d)).astype(dtype))
+        out = l2_distance(q, x, interpret=True)
+        want = ref.l2_distance_ref(q, x)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), atol=2e-2, rtol=2e-2
+        )
+
+    @settings(**SET)
+    @given(
+        n=st.integers(1, 600),
+        m=st.sampled_from([4, 8, 16]),
+        k=st.sampled_from([16, 256]),
+    )
+    def test_pq_adc_matches_ref(n, m, k):
+        rng = np.random.default_rng(n)
+        codes = jnp.asarray(rng.integers(0, k, (n, m)), jnp.uint8)
+        lut = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        out = pq_adc(codes, lut, interpret=True)
+        want = ref.pq_adc_ref(codes, lut)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+
+    @settings(**SET)
+    @given(s=st.integers(1, 700), w=st.sampled_from([1, 2, 4]))
+    def test_hamming_matches_ref(s, w):
+        rng = np.random.default_rng(s)
+        codes = jnp.asarray(
+            rng.integers(0, 2**32, (s, w), dtype=np.uint64).astype(np.uint32)
+        )
+        qc = jnp.asarray(
+            rng.integers(0, 2**32, (w,), dtype=np.uint64).astype(np.uint32)
+        )
+        out = hamming(codes, qc, interpret=True)
+        want = ref.hamming_ref(codes, qc)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    @settings(**SET)
+    @given(
+        p=st.integers(2, 40),
+        cap=st.sampled_from([4, 8, 16]),
+        d=st.sampled_from([16, 64]),
+        b=st.integers(1, 12),
+    )
+    def test_page_gather_l2_matches_ref(p, cap, d, b):
+        rng = np.random.default_rng(p * 7 + b)
+        pages = jnp.asarray(rng.standard_normal((p, cap, d)), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, p, (b,)), jnp.int32)
+        q = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+        out = page_gather_l2(pages, ids, q, interpret=True)
+        want = ref.page_gather_l2_ref(pages, ids, q)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(**SET)
+    @given(
+        p=st.integers(2, 30),
+        cap=st.sampled_from([1, 5, 28]),
+        d=st.sampled_from([16, 32, 128]),
+        rp=st.sampled_from([4, 48]),
+        m=st.sampled_from([4, 8, 16]),
+        b=st.integers(1, 10),
+    )
+    def test_page_scan_matches_ref_property(p, cap, d, rp, m, b):
+        rng = np.random.default_rng(p * 31 + cap * 7 + b)
+        _, _, recs = _random_page_record(rng, p, cap, d, rp, m)
+        ids = jnp.asarray(rng.integers(0, p, (b,)), jnp.int32)
+        q = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+        lut = jnp.asarray(rng.standard_normal((m, 256)), jnp.float32)
+        recs = jnp.asarray(recs)
+        md_k, nd_k = page_scan(
+            recs, ids, q, lut, capacity=cap, dim=d, rp=rp, interpret=True
+        )
+        md_r, nd_r = ref.page_scan_ref(
+            recs, ids, q, lut, capacity=cap, dim=d, rp=rp
+        )
+        np.testing.assert_allclose(
+            np.asarray(md_k), np.asarray(md_r), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(nd_k), np.asarray(nd_r), rtol=1e-4, atol=1e-4
+        )

@@ -1,9 +1,12 @@
-"""End-to-end PageANN search behaviour (Algorithm 2) + memory-mode matrix."""
+"""End-to-end PageANN search behaviour (Algorithm 2) + memory-mode matrix
++ exact equivalence of the fused/top-k hot path against the frozen seed loop."""
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import seed_search_ref
 from repro.core import MemoryMode, PageANNConfig, PageANNIndex, recall_at_k
 from repro.core.vamana import brute_force_knn
 from repro.data.pipeline import clustered_vectors, query_vectors
@@ -51,13 +54,41 @@ def test_io_accounting_invariants(dataset, hybrid_index):
     assert (res.ios <= hybrid_index.store.num_pages).all()  # visited-set works
 
 
-@pytest.mark.parametrize("mode", list(MemoryMode))
-def test_memory_modes_all_reach_recall(dataset, mode):
-    x, q, truth = dataset
-    idx = PageANNIndex.build(x, _cfg(memory_mode=mode))
-    res = idx.search(q, k=10)
+@pytest.fixture(scope="module", params=list(MemoryMode), ids=lambda m: m.value)
+def mode_index(request, dataset):
+    x, _, _ = dataset
+    return PageANNIndex.build(x, _cfg(memory_mode=request.param))
+
+
+def test_memory_modes_all_reach_recall(dataset, mode_index):
+    _, q, truth = dataset
+    res = mode_index.search(q, k=10)
     r = recall_at_k(res.ids, truth)
-    assert r >= 0.8, (mode, r)
+    assert r >= 0.8, (mode_index.cfg.memory_mode, r)
+
+
+def test_optimized_loop_matches_seed_search(dataset, mode_index):
+    """The fused page-scan + top-k hot path is a pure speedup: identical
+    results, I/O counts, and hop counts to the frozen seed loop (argsort
+    merges, serial select, split member/neighbor gathers) on every
+    memory-disk coordination mode."""
+    _, q, _ = dataset
+    qj = jnp.asarray(q, jnp.float32)
+    got = mode_index._raw_search(qj, k=10)
+    want = seed_search_ref.seed_batch_search(qj, mode_index, k=10)
+    np.testing.assert_array_equal(np.asarray(got.ios), np.asarray(want.ios))
+    np.testing.assert_array_equal(np.asarray(got.hops), np.asarray(want.hops))
+    np.testing.assert_array_equal(
+        np.asarray(got.cache_hits), np.asarray(want.cache_hits)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.dists), np.asarray(want.dists), rtol=1e-6, atol=1e-6
+    )
+    # id sets match row-wise (ordering may differ only across exact ties)
+    for i in range(len(q)):
+        assert set(np.asarray(got.ids)[i].tolist()) == set(
+            np.asarray(want.ids)[i].tolist()
+        ), i
 
 
 def test_mem_all_packs_more_vectors_per_page(dataset):
@@ -101,6 +132,25 @@ def test_beam_width_trades_io_for_recall(dataset):
     io_hi = hi.search(q, k=10).ios.mean()
     assert r_hi >= r_lo
     assert io_hi >= io_lo
+
+
+def test_high_dim_vectors_span_multiple_record_rows():
+    """dim > 128 packs each member vector over ceil(d/128) record rows —
+    the fused hot path must handle standard embedding sizes end to end."""
+    d = 160  # rpv = 2, and 160/8 PQ subspaces divides evenly
+    x = clustered_vectors(600, d, num_clusters=8, seed=4)
+    q = query_vectors(x, 8, seed=5)
+    truth = brute_force_knn(x, q, 10)
+    idx = PageANNIndex.build(
+        x,
+        PageANNConfig(
+            dim=d, graph_degree=12, build_beam=24, pq_subspaces=8,
+            lsh_sample=256, lsh_entries=8, beam_width=48, max_hops=48,
+            memory_mode=MemoryMode.HYBRID,
+        ),
+    )
+    res = idx.search(q, k=10)
+    assert recall_at_k(res.ids, truth) >= 0.7
 
 
 def test_layout_equation_capacity():

@@ -144,28 +144,29 @@ def test_shard_search_parity_on_1device_mesh(index):
 
 # ------------------------------------------------------------ ops routing
 def test_search_loop_routes_through_kernel_ops(index, monkeypatch):
-    """Member L2 and neighbor ADC must go through the kernels.ops dispatch
-    layer (pallas on TPU, oracle on CPU) — not inline jnp."""
+    """The fused page scan (member L2 + neighbor ADC from one record DMA)
+    and the memory-tier ADC must go through the kernels.ops dispatch layer
+    (pallas on TPU, oracle on CPU) — not inline jnp."""
     from repro.kernels import ops
 
-    calls = {"page_gather_l2": 0, "pq_adc": 0}
-    real_pg, real_adc = ops.page_gather_l2, ops.pq_adc
+    calls = {"page_scan": 0, "pq_adc": 0}
+    real_ps, real_adc = ops.page_scan, ops.pq_adc
 
-    def spy_pg(*a, **k):
-        calls["page_gather_l2"] += 1
-        return real_pg(*a, **k)
+    def spy_ps(*a, **k):
+        calls["page_scan"] += 1
+        return real_ps(*a, **k)
 
     def spy_adc(*a, **k):
         calls["pq_adc"] += 1
         return real_adc(*a, **k)
 
-    monkeypatch.setattr(ops, "page_gather_l2", spy_pg)
+    monkeypatch.setattr(ops, "page_scan", spy_ps)
     monkeypatch.setattr(ops, "pq_adc", spy_adc)
     q = jnp.asarray(np.zeros((2, D), np.float32))
     kw = search_mod.search_kwargs(index.cfg, index.store.capacity)
     # k=9 is used nowhere else with this index, so jit must re-trace here
     search_mod.batch_search(q, index.data, k=9, **kw)
-    assert calls["page_gather_l2"] >= 1
+    assert calls["page_scan"] >= 1
     assert calls["pq_adc"] >= 1
 
 
