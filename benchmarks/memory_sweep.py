@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
-from repro.core import MemoryMode, recall_at_k
+from repro.core import MemoryMode, SearchParams, recall_at_k
 
 
 def run() -> list[str]:
@@ -24,11 +24,15 @@ def run() -> list[str]:
         ("mem_all_cache", MemoryMode.MEM_ALL, 64),
     ]
     for tag, mode, cache in settings:
+        # the memory mode shapes the *artifact* (page capacity, on-page
+        # codes) so each mode is its own disk-cached index; the search
+        # knobs ride along as per-call params
         cfg = common.base_cfg(memory_mode=mode, cache_pages=cache)
+        params = SearchParams.from_config(cfg)
         idx = common.pageann_index(x, cfg, f"ms_{tag}")
         if cache:
-            idx.warm_cache(np.asarray(q))
-        res, dt = common.timeit(lambda: idx.search(q, k=10))
+            idx.warm_cache(np.asarray(q), params=params)
+        res, dt = common.timeit(lambda: idx.search(q, params=params))
         mem = idx.stats.memory_bytes
         rows.append(
             f"memsweep_{tag},{1e6 * dt / len(q):.1f},"

@@ -37,14 +37,18 @@ ROUNDS = 7  # timed passes over the query set; min is reported (timeit style)
 
 def _run_batches(index, queries: np.ndarray, batch_size: int):
     """Dispatch the query set through batch_search in batch_size chunks."""
-    kw = search_mod.search_kwargs(index.cfg, index.store.capacity)
+    params = index.default_params.replace(k=K)
     chunks = [
         jnp.asarray(queries[i:i + batch_size], jnp.float32)
         for i in range(0, len(queries), batch_size)
     ]
     results = [
         jax.block_until_ready(
-            search_mod.batch_search(c, index.data, k=K, **kw)
+            search_mod.batch_search(
+                c, index.data, params,
+                capacity=index.store.capacity,
+                mode=index.cfg.memory_mode.value,
+            )
         )
         for c in chunks
     ]

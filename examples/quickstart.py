@@ -1,10 +1,26 @@
-"""Quickstart: build a PageANN index, search it, inspect I/O counters.
+"""Quickstart: the index lifecycle — build, search, save, load, re-search.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Build-time knobs (page geometry, PQ, memory mode) live in
+``PageANNConfig``; runtime knobs (beam L, io batch b, LSH top-T, k) are a
+per-call ``SearchParams`` — sweeping them reuses the one built index. The
+saved artifact is the paper's disk layout: a raw page-aligned ``pages.bin``
+plus numpy sidecars and a JSON manifest, and loading it back returns
+bit-identical search results.
 """
+import shutil
+import tempfile
+
 import numpy as np
 
-from repro.core import MemoryMode, PageANNConfig, PageANNIndex, recall_at_k
+from repro.core import (
+    MemoryMode,
+    PageANNConfig,
+    PageANNIndex,
+    SearchParams,
+    recall_at_k,
+)
 from repro.core.vamana import brute_force_knn
 from repro.data.pipeline import clustered_vectors, query_vectors
 
@@ -19,8 +35,6 @@ def main():
         graph_degree=24,          # Vamana degree R
         pq_subspaces=8,           # on-page compressed neighbor codes
         memory_mode=MemoryMode.HYBRID,
-        beam_width=64,            # candidate set L
-        io_batch=5,               # batched page reads per hop (paper: b=5)
     )
     print("building page-node index …")
     index = PageANNIndex.build(x, cfg)
@@ -36,6 +50,31 @@ def main():
     print(f"recall@10 = {recall_at_k(res.ids, truth):.3f}")
     print(f"mean page reads/query = {res.ios.mean():.1f} "
           f"(hops={res.hops.mean():.1f}, cache hits={res.cache_hits.mean():.1f})")
+
+    # runtime knobs are per-call: sweep the beam over the SAME built index
+    for beam, entries in ((16, 4), (64, 12), (128, 16)):
+        params = SearchParams(k=10, beam_width=beam, lsh_entries=entries)
+        r = index.search(queries, params=params)
+        print(f"  beam={beam:3d} -> recall={recall_at_k(r.ids, truth):.3f} "
+              f"ios={r.ios.mean():.1f}")
+
+    # persist the index (the paper's on-SSD artifact) and reload it
+    scratch = tempfile.mkdtemp(prefix="quickstart_index_")
+    art = scratch + "/idx.pageann"
+    try:
+        index.save(art)
+        loaded = PageANNIndex.load(art)
+        res2 = loaded.search(queries, k=10)
+        identical = all(
+            np.array_equal(np.asarray(getattr(res, f)),
+                           np.asarray(getattr(res2, f)))
+            for f in res._fields
+        )
+        print(f"saved -> {art}; reloaded search bit-identical: {identical}")
+        if not identical:
+            raise SystemExit("save/load round trip diverged")
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.core import MemoryMode, PageANNConfig, PageANNIndex
+from repro.core import MemoryMode, PageANNConfig, PageANNIndex, SearchParams
 from repro.launch.serve import generate
 from repro.models import transformer as tf
 from repro.serve import BatchingEngine
@@ -55,11 +55,17 @@ def main():
     index = PageANNIndex.build(corpus_emb, cfg)
 
     # requests arrive one at a time; the batching engine collects them into
-    # one fixed-shape dispatch and demuxes results per request
+    # one fixed-shape dispatch and demuxes results per request. Requests
+    # may carry their own runtime knobs: the last one asks for a wider
+    # beam, forming its own (k-bin, params) dispatch group.
     engine = BatchingEngine.from_index(index, k=3, batch_size=4)
     requests = jnp.asarray(rng.integers(0, arch.vocab_size, (4, 8), np.int32))
     q_emb = np.asarray(embed(state.params, arch, requests), np.float32)
-    futures = [engine.submit(q) for q in q_emb]
+    wide = SearchParams(k=3, beam_width=64, lsh_entries=12)
+    futures = [
+        engine.submit(q, params=wide if i == len(q_emb) - 1 else None)
+        for i, q in enumerate(q_emb)
+    ]
     engine.flush()
     rows = [f.result() for f in futures]
     ids = np.stack([r.result.ids for r in rows])

@@ -1,5 +1,15 @@
 """PageANN core: the paper's contribution as composable JAX modules."""
-from repro.core.config import MemoryMode, PageANNConfig
+from repro.core.config import MemoryMode, PageANNConfig, SearchParams
 from repro.core.index import PageANNIndex, recall_at_k
+from repro.core.persist import load_index
+from repro.core.protocol import VectorIndex
 
-__all__ = ["MemoryMode", "PageANNConfig", "PageANNIndex", "recall_at_k"]
+__all__ = [
+    "MemoryMode",
+    "PageANNConfig",
+    "PageANNIndex",
+    "SearchParams",
+    "VectorIndex",
+    "load_index",
+    "recall_at_k",
+]

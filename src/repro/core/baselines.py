@@ -13,10 +13,18 @@
 
 Both count "Mean I/Os" the same way the paper's Table 3 does, which makes
 them directly comparable with ``core.search`` on the same data.
+
+:class:`DiskANNIndex` / :class:`StarlingIndex` wrap the raw searches in the
+same :class:`repro.core.protocol.VectorIndex` lifecycle as
+``PageANNIndex`` — build/from_data → save → load → ``search(queries, k,
+params)`` returning a ``SearchResult`` — so benchmarks and the serving
+engine drive all three systems through one code path.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import os
 from typing import NamedTuple
 
 import jax
@@ -24,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pq as pq_mod
+from repro.core.config import PageANNConfig, SearchParams, resolve_search_params
 
 PAD = -1
 INF = jnp.inf
@@ -215,3 +224,189 @@ def starling_search(queries, data: BaselineData, *, beam=64, k=10, max_hops=64, 
         queries, data, beam=beam, k=k, max_hops=max_hops,
         io_batch=io_batch, unique_pages=True,
     )
+
+
+# --------------------------------------------------------------------------
+# VectorIndex lifecycle wrappers (protocol shared with PageANNIndex)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BaselineStats:
+    num_vectors: int
+    pages: int
+    memory_bytes: int   # in-memory PQ codes + codebooks (what DiskANN keeps)
+
+
+class _BaselineIndex:
+    """Shared ``VectorIndex`` plumbing over a :class:`BaselineData`.
+
+    Ids are never reassigned by the baselines, so ``search`` results are
+    already ORIGINAL vector ids; ``cache_hits`` is always zero (no warmed
+    page cache in either baseline).
+    """
+
+    kind: str = ""
+    _unique_pages: bool = False
+
+    def __init__(self, data: BaselineData):
+        self.data = data
+
+    # ------------------------------------------------------------ properties
+    @property
+    def dim(self) -> int:
+        return int(self.data.x.shape[1])
+
+    @property
+    def default_params(self) -> SearchParams:
+        return SearchParams()
+
+    def resolve_params(
+        self, k: int | None, params: SearchParams | None
+    ) -> SearchParams:
+        return resolve_search_params(self.default_params, k, params)
+
+    @property
+    def stats(self) -> BaselineStats:
+        return BaselineStats(
+            num_vectors=int(self.data.x.shape[0]),
+            pages=int(np.asarray(self.data.page_of).max()) + 1,
+            memory_bytes=int(
+                self.data.codes.size + self.data.codebooks.size * 4
+            ),
+        )
+
+    # ----------------------------------------------------------------- search
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int | None = None,
+        params: SearchParams | None = None,
+    ):
+        from repro.core.search import SearchResult
+
+        p = self.resolve_params(k, params)
+        res = baseline_search(
+            jnp.asarray(queries, jnp.float32),
+            self.data,
+            beam=p.beam_width,
+            k=p.k,
+            max_hops=p.max_hops,
+            io_batch=p.io_batch,
+            unique_pages=self._unique_pages,
+        )
+        ios = np.asarray(res.ios)
+        return SearchResult(
+            ids=np.asarray(res.ids),
+            dists=np.asarray(res.dists),
+            ios=ios,
+            hops=np.asarray(res.hops),
+            cache_hits=np.zeros_like(ios),
+        )
+
+    # -------------------------------------------------------------- lifecycle
+    def save(self, directory: str) -> None:
+        from repro.core import persist
+
+        os.makedirs(directory, exist_ok=True)
+        np.savez(
+            os.path.join(directory, persist.ARRAYS_NPZ),
+            x=np.asarray(self.data.x),
+            nbrs=np.asarray(self.data.nbrs),
+            codes=np.asarray(self.data.codes),
+            codebooks=np.asarray(self.data.codebooks),
+            page_of=np.asarray(self.data.page_of),
+            entry=np.asarray(self.data.entry),
+        )
+        persist.write_manifest(
+            directory,
+            dict(kind=self.kind, dim=self.dim,
+                 stats=dataclasses.asdict(self.stats)),
+        )
+
+    @classmethod
+    def load(cls, directory: str) -> "_BaselineIndex":
+        from repro.core import persist
+
+        doc = persist.read_manifest(directory)
+        if doc["kind"] != cls.kind:
+            raise ValueError(
+                f"{directory}: kind={doc['kind']!r}, expected {cls.kind!r}"
+            )
+        with np.load(os.path.join(directory, persist.ARRAYS_NPZ)) as z:
+            data = BaselineData(
+                x=jnp.asarray(z["x"]),
+                nbrs=jnp.asarray(z["nbrs"]),
+                codes=jnp.asarray(z["codes"]),
+                codebooks=jnp.asarray(z["codebooks"]),
+                page_of=jnp.asarray(z["page_of"]),
+                entry=jnp.asarray(z["entry"]),
+            )
+        return cls(data)
+
+    # --------------------------------------------------------------- builders
+    @classmethod
+    def from_data(
+        cls,
+        x: np.ndarray,
+        nbrs: np.ndarray,
+        codebooks: np.ndarray,
+        *,
+        page_of: np.ndarray | None = None,
+        vectors_per_page: int | None = None,
+    ) -> "_BaselineIndex":
+        """Wrap a prebuilt Vamana graph + PQ codebooks (shared with PageANN
+        sweeps so all systems search the same graph)."""
+        return cls(
+            make_baseline_data(
+                np.asarray(x), np.asarray(nbrs), np.asarray(codebooks),
+                page_of=page_of, vectors_per_page=vectors_per_page,
+            )
+        )
+
+    @classmethod
+    def build(cls, x: np.ndarray, cfg: PageANNConfig) -> "_BaselineIndex":
+        """Full build from raw vectors using the config's graph/PQ knobs."""
+        from repro.core.vamana import build_vamana
+
+        x = np.ascontiguousarray(x, np.float32)
+        nbrs = build_vamana(
+            x, degree=cfg.graph_degree, beam=cfg.build_beam,
+            alpha=cfg.alpha, rounds=cfg.build_rounds, seed=cfg.seed,
+        )
+        books = np.asarray(pq_mod.train_pq(
+            x, cfg.pq_subspaces, cfg.pq_ksub, cfg.pq_iters, seed=cfg.seed
+        ))
+        return cls.from_data(x, nbrs, books, page_of=cls._layout(x, nbrs, cfg))
+
+    @classmethod
+    def _layout(cls, x, nbrs, cfg: PageANNConfig):
+        return None  # id-order pages (DiskANN); Starling overrides
+
+
+class DiskANNIndex(_BaselineIndex):
+    kind = "diskann"
+    _unique_pages = False
+
+
+class StarlingIndex(_BaselineIndex):
+    kind = "starling"
+    _unique_pages = True
+
+    @classmethod
+    def _layout(cls, x, nbrs, cfg: PageANNConfig):
+        from repro.core.page_graph import group_pages
+
+        return group_pages(x, nbrs, cfg.resolve_capacity(), cfg.hop_h).page_of
+
+
+BASELINE_KINDS = {
+    DiskANNIndex.kind: DiskANNIndex,
+    StarlingIndex.kind: StarlingIndex,
+}
+
+
+def load_baseline(directory: str) -> _BaselineIndex:
+    from repro.core import persist
+
+    kind = persist.read_manifest(directory)["kind"]
+    return BASELINE_KINDS[kind].load(directory)

@@ -31,6 +31,64 @@ class MemoryMode(enum.Enum):
 
 
 @dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Runtime search knobs (Alg. 2), decoupled from the build-time config.
+
+    Frozen and hashable so a ``SearchParams`` value can be a *static* jit
+    argument: each distinct value keys one compiled executable, and a
+    recall-vs-beam sweep compiles a few executables over ONE built index
+    instead of rebuilding it per point. Everything that shapes the on-disk
+    artifact (page geometry, PQ, memory mode) stays in
+    :class:`PageANNConfig`; everything here may vary per search call.
+    """
+
+    k: int = 10              # result set size
+    beam_width: int = 64     # L: candidate set size
+    io_batch: int = 5        # b: batched I/O size (paper uses 5)
+    max_hops: int = 64       # safety bound on the search while_loop
+    lsh_entries: int = 16    # T: top-T Hamming entry candidates
+
+    def __post_init__(self):
+        # beam_width >= lsh_entries is a PageANN-path invariant, enforced
+        # where the LSH router is actually used (core.search) — baseline
+        # indexes ignore lsh_entries and accept any positive beam
+        if self.k <= 0:
+            raise ValueError("k must be positive")
+        if min(self.beam_width, self.io_batch, self.max_hops,
+               self.lsh_entries) <= 0:
+            raise ValueError("all SearchParams fields must be positive")
+
+    @classmethod
+    def from_config(cls, cfg: "PageANNConfig", k: int = 10) -> "SearchParams":
+        """The config's build-time defaults as a runtime parameter set."""
+        return cls(
+            k=k,
+            beam_width=cfg.beam_width,
+            io_batch=cfg.io_batch,
+            max_hops=cfg.max_hops,
+            lsh_entries=cfg.lsh_entries,
+        )
+
+    def replace(self, **kw) -> "SearchParams":
+        return dataclasses.replace(self, **kw)
+
+
+def resolve_search_params(
+    default: SearchParams,
+    k: int | None,
+    params: "SearchParams | None",
+) -> SearchParams:
+    """The protocol-wide resolution rule for ``search(queries, k, params)``:
+    ``params`` wins over the index default, an explicit ``k`` wins over
+    ``params.k``. One definition so every ``VectorIndex`` implementation
+    resolves identically."""
+    p = params if params is not None else default
+    if k is not None and k != p.k:
+        p = p.replace(k=k)
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
 class PageANNConfig:
     dim: int
     # --- Vamana vector-graph build (Sec 4.1 starts from a Vamana graph) ---
@@ -51,7 +109,8 @@ class PageANNConfig:
     lsh_bits: int = 64              # B hyperplane bits
     lsh_sample: int = 1024          # S sampled vectors
     lsh_entries: int = 16           # T entry candidates (top-T Hamming)
-    # --- search (Alg. 2) ---
+    # --- search (Alg. 2): per-call defaults only — the runtime values live
+    # in SearchParams and may differ on every search() call ---
     beam_width: int = 64            # L: candidate set size
     io_batch: int = 5               # b: batched I/O size (paper uses 5)
     max_hops: int = 64              # safety bound on while_loop

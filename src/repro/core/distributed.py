@@ -26,7 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import compat
 from repro.core import search as search_mod
-from repro.core.config import PageANNConfig
+from repro.core.config import PageANNConfig, SearchParams
 
 PAD = -1
 
@@ -116,6 +116,7 @@ def make_sharded_search(
     capacity: int,
     k: int,
     *,
+    params: SearchParams | None = None,
     shard_axis: str = "data",
     query_axis: str = "model",
 ):
@@ -123,13 +124,17 @@ def make_sharded_search(
 
     stacked SearchData leaves are sharded P(shard_axis); queries (Q, d) are
     sharded P(query_axis); outputs (Q, k) are sharded P(query_axis).
+    ``params`` defaults to the config's search knobs.
     """
-    kw = search_mod.search_kwargs(cfg, capacity)
+    p = (params or SearchParams.from_config(cfg)).replace(k=k)
+    mode = cfg.memory_mode.value
 
     def local_search(data_blk, q_blk):
         # data_blk leaves: (1, ...) — this device's shard
         data = jax.tree.map(lambda a: a[0], data_blk)
-        res = search_mod.batch_search(q_blk, data, k=k, **kw)
+        res = search_mod.batch_search(
+            q_blk, data, p, capacity=capacity, mode=mode
+        )
         # tag ids with shard so the merge can translate back
         sid = jax.lax.axis_index(shard_axis)
         tagged = jnp.where(res.ids >= 0, res.ids, PAD)

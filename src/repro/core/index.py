@@ -6,7 +6,13 @@ packing (Sec 4.2/5) -> LSH routing index -> memory-disk coordination
 (Sec 4.3) with optional warm-up page caching.
 
 Query stage: ``search`` wraps ``core.search.batch_search`` and translates
-results back to original vector ids.
+results back to original vector ids; runtime knobs arrive per call as a
+:class:`repro.core.config.SearchParams` (one compiled executable per
+distinct value — sweeps never rebuild the index).
+
+Lifecycle: ``save(dir)`` / ``load(dir)`` persist the index through
+``core.persist`` (raw page-aligned ``pages.bin`` + numpy sidecars + JSON
+manifest); loading round-trips to bit-identical search results.
 """
 from __future__ import annotations
 
@@ -22,7 +28,12 @@ from repro.core import page_graph as pg_mod
 from repro.core import pq as pq_mod
 from repro.core import search as search_mod
 from repro.core import vamana as vamana_mod
-from repro.core.config import MemoryMode, PageANNConfig
+from repro.core.config import (
+    MemoryMode,
+    PageANNConfig,
+    SearchParams,
+    resolve_search_params,
+)
 
 PAD = -1
 
@@ -140,10 +151,26 @@ class PageANNIndex:
             idx.warm_cache(warmup_queries)
         return idx
 
+    # ------------------------------------------------------------ properties
+    @property
+    def dim(self) -> int:
+        return self.cfg.dim
+
+    @property
+    def default_params(self) -> SearchParams:
+        """The build config's search knobs as a runtime parameter set."""
+        return SearchParams.from_config(self.cfg)
+
+    def resolve_params(
+        self, k: int | None, params: SearchParams | None
+    ) -> SearchParams:
+        return resolve_search_params(self.default_params, k, params)
+
     # ------------------------------------------------------------------ cache
-    def warm_cache(self, queries: np.ndarray) -> None:
+    def warm_cache(self, queries: np.ndarray, params: SearchParams | None = None) -> None:
         """Sec 4.3: run a warm-up batch, cache the hottest pages."""
-        res = self._raw_search(jnp.asarray(queries, jnp.float32), k=10)
+        p = self.resolve_params(None, params)
+        res = self._raw_search(jnp.asarray(queries, jnp.float32), p)
         pages = np.asarray(res.ids) // self.store.capacity
         pages = pages[np.asarray(res.ids) >= 0]
         uniq, counts = np.unique(pages, return_counts=True)
@@ -154,12 +181,20 @@ class PageANNIndex:
         self.data = search_mod.make_search_data(self.store, self.tier, self.lsh)
 
     # ----------------------------------------------------------------- search
-    def _raw_search(self, q: jnp.ndarray, k: int) -> search_mod.SearchResult:
+    def _raw_search(
+        self, q: jnp.ndarray, params: SearchParams, mesh=None
+    ) -> search_mod.SearchResult:
+        if mesh is not None:
+            return search_mod.shard_search(
+                q, self.data, params,
+                mesh=mesh,
+                capacity=self.store.capacity,
+                mode=self.cfg.memory_mode.value,
+            )
         return search_mod.batch_search(
-            q,
-            self.data,
-            k=k,
-            **search_mod.search_kwargs(self.cfg, self.store.capacity),
+            q, self.data, params,
+            capacity=self.store.capacity,
+            mode=self.cfg.memory_mode.value,
         )
 
     def translate_ids(self, ids: np.ndarray) -> np.ndarray:
@@ -170,9 +205,22 @@ class PageANNIndex:
         old[valid] = self.store.new_to_old[ids[valid]]
         return old
 
-    def search(self, queries: np.ndarray, k: int = 10) -> search_mod.SearchResult:
-        """Search; returns ORIGINAL vector ids."""
-        res = self._raw_search(jnp.asarray(queries, jnp.float32), k=k)
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int | None = None,
+        params: SearchParams | None = None,
+        *,
+        mesh=None,
+    ) -> search_mod.SearchResult:
+        """Search; returns ORIGINAL vector ids.
+
+        ``params`` supplies the runtime knobs (defaults come from the build
+        config); ``k`` overrides ``params.k`` when given. Passing a device
+        mesh routes through ``shard_search`` (query batch split across it).
+        """
+        p = self.resolve_params(k, params)
+        res = self._raw_search(jnp.asarray(queries, jnp.float32), p, mesh=mesh)
         return search_mod.SearchResult(
             ids=self.translate_ids(res.ids),
             dists=np.asarray(res.dists),
@@ -181,11 +229,36 @@ class PageANNIndex:
             cache_hits=np.asarray(res.cache_hits),
         )
 
+    # -------------------------------------------------------------- lifecycle
+    def save(self, directory: str) -> None:
+        """Persist to ``directory``: page-aligned ``pages.bin`` (the paper's
+        disk layout, memmap-readable) + numpy sidecars + JSON manifest."""
+        from repro.core import persist
+
+        persist.save_pageann(self, directory)
+
+    @classmethod
+    def load(cls, directory: str) -> "PageANNIndex":
+        """Reload a saved index; searches are bit-identical to the original."""
+        from repro.core import persist
+
+        return persist.load_pageann(directory)
+
 
 def recall_at_k(found_ids: np.ndarray, truth_ids: np.ndarray) -> float:
-    """Mean recall@k over a query batch (paper's Recall@10 metric)."""
-    hits = 0
-    q, k = truth_ids.shape
-    for i in range(q):
-        hits += len(set(found_ids[i].tolist()) & set(truth_ids[i].tolist()))
-    return hits / (q * k)
+    """Mean recall@k over a query batch (paper's Recall@10 metric).
+
+    Set semantics per row (duplicates counted once on both sides, PAD ids
+    included verbatim — identical to the former per-query
+    ``len(set & set)`` loop), vectorized as one broadcast comparison:
+    a truth entry scores iff it appears anywhere in the found row and is
+    the first occurrence of its value within the truth row.
+    """
+    found = np.asarray(found_ids)
+    truth = np.asarray(truth_ids)
+    q, k = truth.shape
+    present = (truth[:, :, None] == found[:, None, :]).any(-1)     # (Q, k)
+    j = np.arange(k)
+    dup = ((truth[:, :, None] == truth[:, None, :])
+           & (j[None, None, :] < j[None, :, None])).any(-1)        # (Q, k)
+    return float((present & ~dup).sum() / (q * k))

@@ -149,6 +149,43 @@ def pack_page_records(vecs: np.ndarray, nbr_codes: np.ndarray) -> np.ndarray:
     return rec
 
 
+def unpack_member_vectors(
+    recs: np.ndarray, capacity: int, dim: int
+) -> np.ndarray:
+    """Inverse of ``pack_page_records`` for the member block: (P, cap, d).
+
+    The packed record stores member vectors as verbatim f32 lanes, so the
+    round trip is bit-exact — ``PageANNIndex.load`` rebuilds the host-side
+    ``PageStore.vecs`` view from the memmapped page file instead of
+    persisting the vectors twice.
+    """
+    recs = np.asarray(recs, np.float32)
+    p = recs.shape[0]
+    mrows = member_rows(capacity, dim)
+    if dim <= PAGE_LANES:
+        vpr = vectors_per_row(dim)
+        flat = recs[:, :mrows, : vpr * dim].reshape(p, mrows * vpr, dim)
+        return np.ascontiguousarray(flat[:, :capacity])
+    rpv = rows_per_vector(dim)
+    flat = recs[:, :mrows].reshape(p, capacity, rpv * PAGE_LANES)
+    return np.ascontiguousarray(flat[:, :, :dim])
+
+
+def unpack_neighbor_codes(
+    recs: np.ndarray, capacity: int, dim: int, rp: int, m: int
+) -> np.ndarray:
+    """Inverse of ``pack_page_records`` for the code block: (P, Rp, M) u8.
+
+    Code lanes hold the uint8 values verbatim as f32 (0..255 are exact), so
+    like ``unpack_member_vectors`` this lets persistence keep one copy of
+    the disk tier — only valid when the record carries code rows (i.e. not
+    MEM_ALL, whose records drop them)."""
+    recs = np.asarray(recs, np.float32)
+    mrows = member_rows(capacity, dim)
+    block = recs[:, mrows:mrows + m, :rp]               # (P, M, Rp)
+    return np.ascontiguousarray(block.transpose(0, 2, 1).astype(np.uint8))
+
+
 def pack_pages(
     x: np.ndarray,
     grouping: PageGrouping,

@@ -1,0 +1,53 @@
+"""The unified index lifecycle contract: build → save → load → search.
+
+Every searchable index in this repo — :class:`repro.core.index.PageANNIndex`
+and the DiskANN/Starling baselines in :mod:`repro.core.baselines` — speaks
+the same small surface, so benchmarks sweep all systems through one code
+path and the serving engine (:class:`repro.serve.BatchingEngine`) is
+implementation-agnostic:
+
+  * ``search(queries, k=None, params=None) -> SearchResult`` — runtime
+    knobs arrive per call as a :class:`repro.core.config.SearchParams`
+    (``k`` overrides ``params.k`` when given); results carry ORIGINAL
+    vector ids and the paper's I/O accounting.
+  * ``save(directory)`` — persist the index artifact to disk.
+  * ``load(directory)`` (classmethod) — reload it; searches on the loaded
+    index are bit-identical to the saved one.
+  * ``stats`` — build/footprint statistics object.
+  * ``dim`` — vector dimensionality accepted by ``search``.
+
+``repro.core.persist.load_index`` reopens a saved directory as whichever
+implementation wrote it.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.config import SearchParams
+from repro.core.search import SearchResult
+
+
+@runtime_checkable
+class VectorIndex(Protocol):
+    @property
+    def dim(self) -> int: ...
+
+    @property
+    def default_params(self) -> SearchParams: ...
+
+    @property
+    def stats(self): ...
+
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int | None = None,
+        params: SearchParams | None = None,
+    ) -> SearchResult: ...
+
+    def save(self, directory: str) -> None: ...
+
+    @classmethod
+    def load(cls, directory: str) -> "VectorIndex": ...

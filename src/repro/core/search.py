@@ -30,6 +30,9 @@ sorted ``searchsorted`` probes instead of O(b*Rp*L) broadcasts.
 Everything is fixed-shape: the loop is a ``lax.while_loop``, queries are
 vmapped (``batch_search``) and optionally sharded over a device mesh
 (``shard_search`` — pad rows carry ``valid=False`` and exit at hop 0).
+Runtime knobs (beam L, io batch b, max hops, LSH top-T, k) arrive per call
+as a frozen :class:`repro.core.config.SearchParams` used as a static jit
+argument — one compiled executable per distinct value, over one index.
 I/O and cache-hit counters reproduce the paper's "Mean I/Os" metric.
 Later async-prefetch / cache-eviction work should extend the transition
 functions, not re-inline the loop.
@@ -45,7 +48,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.core import pq as pq_mod
-from repro.core.config import MemoryMode, PageANNConfig
+from repro.core.config import MemoryMode, SearchParams
 from repro.core.layout import MemoryTier, PageStore
 from repro.core.lsh import LSHIndex, hash_codes
 from repro.kernels import ops
@@ -434,16 +437,47 @@ def _batch_search_impl(
     return SearchResult(ids=ids, dists=dists, ios=ios, hops=hops, cache_hits=hits)
 
 
+def _impl_kwargs(params: SearchParams, capacity: int, mode: str) -> dict:
+    if params.beam_width < params.lsh_entries:
+        raise ValueError(
+            "PageANN search needs beam_width >= lsh_entries: the top-T LSH "
+            f"entry candidates seed the beam (got L={params.beam_width}, "
+            f"T={params.lsh_entries})"
+        )
+    return dict(
+        capacity=capacity,
+        beam=params.beam_width,
+        io_batch=params.io_batch,
+        k=params.k,
+        max_hops=params.max_hops,
+        entries=params.lsh_entries,
+        mode=mode,
+    )
+
+
 @functools.partial(
-    jax.jit,
-    static_argnames=(
-        "capacity", "beam", "io_batch", "k", "max_hops", "entries", "mode"
-    ),
+    jax.jit, static_argnames=("params", "capacity", "mode")
 )
-def batch_search(queries: jnp.ndarray, data: SearchData, **kw) -> SearchResult:
-    """Search a batch of queries. queries: (Q, d)."""
+def batch_search(
+    queries: jnp.ndarray,
+    data: SearchData,
+    params: SearchParams,
+    *,
+    capacity: int,
+    mode: str,
+) -> SearchResult:
+    """Search a batch of queries. queries: (Q, d).
+
+    ``params`` carries the per-call runtime knobs (beam L, io batch b,
+    max hops, LSH top-T, k) and, being frozen/hashable, is a *static* jit
+    argument: each distinct ``SearchParams`` value keys one compiled
+    executable over the same built index. ``capacity`` and ``mode`` are
+    build-time properties of the index artifact.
+    """
     valid = jnp.ones((queries.shape[0],), bool)
-    return _batch_search_impl(queries, data, valid, **kw)
+    return _batch_search_impl(
+        queries, data, valid, **_impl_kwargs(params, capacity, mode)
+    )
 
 
 # --------------------------------------------------------------------------
@@ -451,24 +485,15 @@ def batch_search(queries: jnp.ndarray, data: SearchData, **kw) -> SearchResult:
 # --------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=32)
-def _shard_search_fn(
-    mesh, capacity, beam, io_batch, k, max_hops, entries, mode
-):
+def _shard_search_fn(mesh, params: SearchParams, capacity: int, mode: str):
     """jitted shard_map: queries split over every mesh axis, data replicated.
 
-    Cached per (mesh, static config) so repeated serving calls reuse the
-    compiled executable.
+    Cached per (mesh, params, capacity, mode) so repeated serving calls
+    reuse the compiled executable.
     """
     axes = tuple(mesh.axis_names)
     local = functools.partial(
-        _batch_search_impl,
-        capacity=capacity,
-        beam=beam,
-        io_batch=io_batch,
-        k=k,
-        max_hops=max_hops,
-        entries=entries,
-        mode=mode,
+        _batch_search_impl, **_impl_kwargs(params, capacity, mode)
     )
     data_spec = jax.tree.map(
         lambda _: P(), SearchData(*[0] * len(SearchData._fields))
@@ -485,14 +510,10 @@ def _shard_search_fn(
 def shard_search(
     queries: jnp.ndarray,
     data: SearchData,
+    params: SearchParams,
     *,
     mesh=None,
     capacity: int,
-    beam: int,
-    io_batch: int,
-    k: int,
-    max_hops: int,
-    entries: int,
     mode: str,
 ) -> SearchResult:
     """``batch_search`` with the query batch sharded across a device mesh.
@@ -512,9 +533,7 @@ def shard_search(
         from repro.launch.mesh import make_host_mesh
 
         mesh = make_host_mesh()
-    fn = _shard_search_fn(
-        mesh, capacity, beam, io_batch, k, max_hops, entries, mode
-    )
+    fn = _shard_search_fn(mesh, params, capacity, mode)
     num_dev = 1
     for n in mesh.shape.values():
         num_dev *= n
@@ -532,12 +551,3 @@ def shard_search(
     return res
 
 
-def search_kwargs(cfg: PageANNConfig, capacity: int) -> dict:
-    return dict(
-        capacity=capacity,
-        beam=cfg.beam_width,
-        io_batch=cfg.io_batch,
-        max_hops=cfg.max_hops,
-        entries=cfg.lsh_entries,
-        mode=cfg.memory_mode.value,
-    )

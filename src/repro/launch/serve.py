@@ -1,10 +1,15 @@
 """Serving driver: batched prefill + greedy decode, optionally retrieval-
-augmented through a PageANN index (the paper's system as a first-class
-serving feature — see examples/serve_rag.py for the full RAG loop).
+augmented through a PERSISTED vector index (the paper's system as a
+first-class serving feature — see examples/serve_rag.py for the full RAG
+loop). ``--index-dir`` loads a saved index (``PageANNIndex.save`` /
+``DiskANNIndex.save`` / ``StarlingIndex.save`` artifact — whichever kind
+the manifest names) through the ``VectorIndex`` lifecycle and retrieves
+neighbor ids for every prompt embedding before decoding: the build-once /
+serve-many workflow, no index rebuild in the serving process.
 
 Usage (CPU smoke; --arch defaults to granite-3-2b):
   PYTHONPATH=src python -m repro.launch.serve --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 [--index-dir idx.pageann]
 """
 from __future__ import annotations
 
@@ -44,6 +49,12 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument(
+        "--index-dir", default=None,
+        help="saved VectorIndex directory: retrieve neighbor ids for each "
+             "prompt embedding through the loaded index before decoding",
+    )
+    ap.add_argument("--retrieve-k", type=int, default=3)
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
@@ -53,6 +64,28 @@ def main(argv=None):
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, arch.vocab_size
     )
+
+    if args.index_dir:
+        from repro.core import load_index
+        from repro.serve import BatchingEngine
+
+        index = load_index(args.index_dir)
+        emb = np.asarray(
+            state.params["embed"][prompts].mean(axis=1), np.float32
+        )
+        if emb.shape[1] != index.dim:
+            raise SystemExit(
+                f"prompt embedding dim {emb.shape[1]} != index dim {index.dim}"
+            )
+        engine = BatchingEngine.from_index(
+            index, k=args.retrieve_k, batch_size=args.batch
+        )
+        rows = engine.search(emb)
+        engine.close()
+        ids = np.stack([r.result.ids for r in rows])
+        print(f"loaded {type(index).__name__} from {args.index_dir}; "
+              f"retrieved ids per prompt:\n{ids}")
+
     t0 = time.perf_counter()
     out = generate(state.params, arch, prompts, args.gen)
     dt = time.perf_counter() - t0

@@ -1,19 +1,25 @@
-"""Request-batching serving frontend for PageANN search.
+"""Request-batching serving frontend for any ``VectorIndex`` backend.
 
-The jitted search is fixed-shape: one compiled executable per (batch, k)
-pair. A serving workload, though, is a stream of single queries arriving at
-arbitrary times. This engine bridges the two — the paper's "query threads"
-as a batching frontend:
+The jitted search is fixed-shape: one compiled executable per (batch, k,
+SearchParams) triple. A serving workload, though, is a stream of single
+queries arriving at arbitrary times with per-request knobs. This engine
+bridges the two — the paper's "query threads" as a batching frontend:
 
-  * ``submit`` enqueues one query and returns a future;
-  * a batch dispatches when ``batch_size`` requests are pending, when
-    ``timeout_ms`` elapses after the first pending request, or on an
+  * ``submit`` enqueues one query (optionally with its own ``k`` and
+    ``SearchParams``) and returns a future;
+  * requests are grouped by (k-bin, params): each distinct group fills its
+    own fixed-shape batch, so per-request knobs never force a recompile of
+    an already-warm executable. Per-request ``k`` is rounded UP to the
+    engine's ``k_bins`` grid (results trimmed back to the requested k), so
+    the number of compiled shapes — and the padding a small k pays — stays
+    bounded no matter how many distinct k values clients send;
+  * a group dispatches when ``batch_size`` of its requests are pending,
+    when ``timeout_ms`` elapses after the first pending request, or on an
     explicit ``flush`` — whichever comes first. The search runs in the
-    thread that triggered the dispatch (the batch-completing submitter,
-    the timer, or the flusher), so one submit() in every ``batch_size``
-    pays the search latency inline — amortized, not hidden;
+    thread that triggered the dispatch, so one submit() in every
+    ``batch_size`` pays the search latency inline — amortized, not hidden;
   * ragged batches are zero-padded to the fixed ``batch_size`` shape (one
-    executable, no recompiles) and the pad rows' results are dropped;
+    executable per group, no recompiles) and the pad rows' results dropped;
   * results are demultiplexed back to futures in submission order, with
     per-request latency and aggregate QPS / mean-I/O counters.
 
@@ -21,9 +27,10 @@ The engine lock covers only queue and counter bookkeeping — the search
 itself runs outside it, so other threads keep enqueuing (and the next
 batch keeps filling) while a batch computes.
 
-The backend is any ``fn(queries (B, d)) -> SearchResult``-like pytree with
-a leading batch axis — ``core.search.batch_search`` on one device,
-``core.search.shard_search`` across a mesh (``from_index(mesh=...)``).
+The backend is any ``fn(queries (B, d), k, params) -> SearchResult``-like
+pytree with a leading batch axis. ``from_index`` wraps anything speaking
+the :class:`repro.core.protocol.VectorIndex` protocol — ``PageANNIndex``
+(optionally sharded over a mesh) or the DiskANN/Starling baselines.
 """
 from __future__ import annotations
 
@@ -35,6 +42,8 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import numpy as np
+
+from repro.core.config import SearchParams
 
 
 class RequestResult(NamedTuple):
@@ -61,31 +70,47 @@ class EngineMetrics(NamedTuple):
 class _Pending(NamedTuple):
     future: Future
     query: np.ndarray
+    k: int               # the k the caller asked for (<= the group's k bin)
     t_submit: float
 
 
 class BatchingEngine:
     def __init__(
         self,
-        search_fn: Callable[[np.ndarray], Any],
+        search_fn: Callable[[np.ndarray, int, SearchParams | None], Any],
         *,
         dim: int,
         batch_size: int = 64,
         timeout_ms: float | None = None,
+        default_k: int | None = None,
+        default_params: SearchParams | None = None,
+        k_bins: tuple[int, ...] | None = None,
         latency_window: int = 8192,
         dtype=np.float32,
         clock: Callable[[], float] = time.perf_counter,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if k_bins is not None and (not k_bins or min(k_bins) < 1):
+            raise ValueError("k_bins must be a non-empty tuple of positive ints")
         self._search_fn = search_fn
         self._dim = dim
         self._batch_size = batch_size
         self._timeout_ms = timeout_ms
+        # same precedence as resolve_search_params: an explicit default_k
+        # wins, otherwise the configured params speak, otherwise k=10
+        if default_k is None:
+            default_k = (
+                default_params.k if default_params is not None else 10
+            )
+        self._default_k = default_k
+        self._default_params = default_params
+        self._k_bins = tuple(sorted(k_bins)) if k_bins else None
         self._dtype = dtype
         self._clock = clock
         self._lock = threading.RLock()
-        self._pending: list[_Pending] = []
+        # (k_bin, params) -> pending requests of that shape/knob group
+        self._pending: dict[tuple, list[_Pending]] = {}
         self._timer: threading.Timer | None = None
         self._timer_gen = 0     # invalidates stale timers (see _flush_due)
         self._closed = False
@@ -102,11 +127,39 @@ class BatchingEngine:
         self._t_last: float | None = None
 
     # ------------------------------------------------------------- requests
-    def submit(self, query: np.ndarray) -> Future:
-        """Enqueue one (d,) query; returns a Future[RequestResult]."""
+    def _bin_k(self, k: int) -> int:
+        """Round k up to the engine's k grid (bounded compiled shapes)."""
+        if self._k_bins is None:
+            return k
+        for b in self._k_bins:
+            if b >= k:
+                return b
+        return k  # above the grid: its own exact shape
+
+    def submit(
+        self,
+        query: np.ndarray,
+        *,
+        k: int | None = None,
+        params: SearchParams | None = None,
+    ) -> Future:
+        """Enqueue one (d,) query; returns a Future[RequestResult].
+
+        ``k``/``params`` default to the engine's; requests sharing a
+        (k-bin, params) group share one fixed-shape dispatch.
+        """
         q = np.asarray(query, self._dtype).reshape(-1)
         if q.shape[0] != self._dim:
             raise ValueError(f"query dim {q.shape[0]} != engine dim {self._dim}")
+        if k is None:
+            # an explicit SearchParams speaks for the request: its k wins
+            # over the engine default unless the kwarg overrides it
+            k = params.k if params is not None else self._default_k
+        k = int(k)
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        params = params if params is not None else self._default_params
+        key = (self._bin_k(k), params)
         fut: Future = Future()
         batch = None
         with self._lock:
@@ -114,32 +167,40 @@ class BatchingEngine:
                 raise RuntimeError("engine is closed")
             if self._t_first is None:
                 self._t_first = self._clock()
-            self._pending.append(_Pending(fut, q, self._clock()))
-            if len(self._pending) >= self._batch_size:
-                batch = self._take_locked()
-            elif self._timeout_ms is not None and self._timer is None:
-                gen = self._timer_gen
-                self._timer = threading.Timer(
-                    self._timeout_ms / 1e3, self._flush_due, args=(gen,)
-                )
-                self._timer.daemon = True
-                self._timer.start()
+            group = self._pending.setdefault(key, [])
+            group.append(_Pending(fut, q, k, self._clock()))
+            if len(group) >= self._batch_size:
+                batch = self._take_locked(key)
+            else:
+                self._arm_timer_locked()
         if batch is not None:
-            self._run_batch(batch)
+            self._run_batch(key, batch)
         return fut
 
     def flush(self) -> None:
-        """Dispatch whatever is pending, padding the ragged batch."""
+        """Dispatch whatever is pending in every group, padding ragged
+        batches."""
         while True:
             with self._lock:
-                batch = self._take_locked() if self._pending else None
+                key = next(
+                    (key for key, grp in self._pending.items() if grp), None
+                )
+                batch = self._take_locked(key) if key is not None else None
             if batch is None:
                 return
-            self._run_batch(batch)
+            self._run_batch(key, batch)
 
-    def search(self, queries: np.ndarray) -> list[RequestResult]:
+    def search(
+        self,
+        queries: np.ndarray,
+        *,
+        k: int | None = None,
+        params: SearchParams | None = None,
+    ) -> list[RequestResult]:
         """Synchronous convenience: submit a (Q, d) batch, flush, gather."""
-        futs = [self.submit(q) for q in np.asarray(queries)]
+        futs = [
+            self.submit(q, k=k, params=params) for q in np.asarray(queries)
+        ]
         self.flush()
         return [f.result() for f in futs]
 
@@ -153,40 +214,95 @@ class BatchingEngine:
 
     # ------------------------------------------------------------- dispatch
     def _flush_due(self, gen: int) -> None:
-        """Timer callback. A timer that raced a size-triggered dispatch (its
-        generation was retired by _take_locked before it got the lock) must
-        no-op, or it would prematurely flush the NEXT batch."""
+        """Timer callback: dispatch only the groups whose OLDEST request has
+        aged past the timeout, then re-arm for whatever remains — a timer
+        fired by one stale group must not flush a just-arrived group into a
+        near-empty padded batch. A timer that raced a size-triggered
+        dispatch (its generation was retired by _take_locked before it got
+        the lock) must no-op, or it would prematurely flush the NEXT
+        batch."""
         with self._lock:
             if gen != self._timer_gen or self._closed:
                 return
             self._timer = None
-            batch = self._take_locked() if self._pending else None
-        if batch is not None:
-            self._run_batch(batch)
+        deadline_s = self._timeout_ms / 1e3
+        while True:
+            with self._lock:
+                now = self._clock()
+                key = next(
+                    (
+                        key
+                        for key, grp in self._pending.items()
+                        if grp and now - grp[0].t_submit >= deadline_s
+                    ),
+                    None,
+                )
+                batch = self._take_locked(key) if key is not None else None
+                if batch is None:
+                    self._arm_timer_locked()
+                    return
+            self._run_batch(key, batch)
 
-    def _take_locked(self) -> tuple[int, list[_Pending]]:
-        """Pop up to batch_size pending requests and retire the live timer.
-        Caller must hold the lock; the batch index is assigned here so
-        dispatch order matches take order even with concurrent submitters."""
-        take = self._pending[: self._batch_size]
-        self._pending = self._pending[self._batch_size:]
+    def _arm_timer_locked(self) -> None:
+        """Start the timeout timer if requests are pending and none is live.
+        The delay is measured from the OLDEST pending submit, not reset to
+        the full duration — otherwise steady full-batch traffic in one
+        group would push a sparse group's deadline out forever. Caller must
+        hold the lock."""
+        if (
+            self._timeout_ms is not None
+            and self._timer is None
+            and not self._closed
+            and any(self._pending.values())
+        ):
+            oldest = min(
+                p.t_submit for grp in self._pending.values() for p in grp
+            )
+            delay = max(
+                0.0, self._timeout_ms / 1e3 - (self._clock() - oldest)
+            )
+            gen = self._timer_gen
+            self._timer = threading.Timer(
+                delay, self._flush_due, args=(gen,)
+            )
+            self._timer.daemon = True
+            self._timer.start()
+
+    def _take_locked(self, key: tuple) -> tuple[int, list[_Pending]]:
+        """Pop up to batch_size pending requests of one group and retire the
+        live timer — re-arming it when OTHER groups still hold pending
+        requests, so a size-triggered dispatch of one (k-bin, params) group
+        never strands another group's waiters. Caller must hold the lock;
+        the batch index is assigned here so dispatch order matches take
+        order even with concurrent submitters."""
+        group = self._pending.get(key, [])
+        take = group[: self._batch_size]
+        rest = group[self._batch_size:]
+        if rest:
+            self._pending[key] = rest
+        else:
+            # drop drained keys: distinct (k, params) combinations must not
+            # accumulate empty entries in a long-lived server
+            self._pending.pop(key, None)
         self._timer_gen += 1
         if self._timer is not None:
             self._timer.cancel()
             self._timer = None
+        self._arm_timer_locked()
         batch_index = self._batches
         self._batches += 1
         return batch_index, take
 
-    def _run_batch(self, batch: tuple[int, list[_Pending]]) -> None:
+    def _run_batch(self, key: tuple, batch: tuple[int, list[_Pending]]) -> None:
         """Pad, search (outside the lock), record counters, demux."""
+        k_bin, params = key
         batch_index, take = batch
         n = len(take)
         padded = np.zeros((self._batch_size, self._dim), self._dtype)
         for i, p in enumerate(take):
             padded[i] = p.query
         try:
-            out = self._search_fn(padded)
+            out = self._search_fn(padded, k_bin, params)
             out = jax.tree.map(np.asarray, out)
         except Exception as e:
             # a backend failure must reach every waiter through its future —
@@ -212,6 +328,14 @@ class BatchingEngine:
                 self._total_ios += float(np.sum(ios[:n]))
         for i, p in enumerate(take):
             row = jax.tree.map(lambda a: a[i], out)
+            if p.k < k_bin:
+                # k was rounded up to the bin: trim the result axes back
+                row = jax.tree.map(
+                    lambda a: a[: p.k]
+                    if getattr(a, "ndim", 0) >= 1 and a.shape[0] == k_bin
+                    else a,
+                    row,
+                )
             p.future.set_result(
                 RequestResult(
                     result=row,
@@ -257,38 +381,34 @@ class BatchingEngine:
         cls,
         index,
         *,
-        k: int = 10,
+        k: int | None = None,
         batch_size: int = 64,
         timeout_ms: float | None = None,
+        params: SearchParams | None = None,
+        k_bins: tuple[int, ...] | None = None,
         mesh=None,
         **kwargs,
     ) -> "BatchingEngine":
-        """Engine over a built ``PageANNIndex``; results carry ORIGINAL ids.
+        """Engine over any built/loaded ``VectorIndex``; results carry
+        ORIGINAL vector ids.
 
-        ``mesh=None`` dispatches ``batch_search`` on the default device;
+        The backend is the protocol's ``index.search(queries, k, params)``
+        — PageANN, DiskANN, or Starling alike. For a ``PageANNIndex``,
         passing a mesh (see ``launch.mesh``) dispatches ``shard_search``
         with the query batch split across it.
         """
-        from repro.core import search as search_mod
-
-        kw = search_mod.search_kwargs(index.cfg, index.store.capacity)
-
-        def fn(queries: np.ndarray):
-            import jax.numpy as jnp
-
-            qj = jnp.asarray(queries)
-            if mesh is None:
-                res = search_mod.batch_search(qj, index.data, k=k, **kw)
-            else:
-                res = search_mod.shard_search(
-                    qj, index.data, mesh=mesh, k=k, **kw
-                )
-            return res._replace(ids=index.translate_ids(res.ids))
+        def fn(queries: np.ndarray, k_bin: int, p: SearchParams | None):
+            if mesh is not None:
+                return index.search(queries, k=k_bin, params=p, mesh=mesh)
+            return index.search(queries, k=k_bin, params=p)
 
         return cls(
             fn,
-            dim=index.cfg.dim,
+            dim=index.dim,
             batch_size=batch_size,
             timeout_ms=timeout_ms,
+            default_k=k,
+            default_params=params,
+            k_bins=k_bins,
             **kwargs,
         )

@@ -1,0 +1,254 @@
+"""Index lifecycle: runtime SearchParams, on-disk persistence, and the
+unified VectorIndex protocol (build → save → load → search)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MemoryMode,
+    PageANNConfig,
+    PageANNIndex,
+    SearchParams,
+    VectorIndex,
+    load_index,
+    recall_at_k,
+)
+from repro.core import baselines as bl
+from repro.core import persist
+from repro.core import pq as pq_mod
+from repro.core.layout import pack_page_records, unpack_member_vectors
+from repro.core.vamana import brute_force_knn, build_vamana
+from repro.data.pipeline import clustered_vectors, query_vectors
+
+N, D, Q = 1200, 32, 12
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    x = clustered_vectors(N, D, num_clusters=16, seed=0)
+    q = query_vectors(x, Q, seed=1)
+    truth = brute_force_knn(x, q, 10)
+    return x, q, truth
+
+
+def _cfg(**kw):
+    base = dict(
+        dim=D, graph_degree=12, build_beam=24, pq_subspaces=8,
+        lsh_sample=256, lsh_entries=8, beam_width=48, max_hops=48,
+        memory_mode=MemoryMode.HYBRID,
+    )
+    base.update(kw)
+    return PageANNConfig(**base)
+
+
+@pytest.fixture(scope="module", params=list(MemoryMode), ids=lambda m: m.value)
+def mode_index(request, dataset):
+    x, _, _ = dataset
+    return PageANNIndex.build(x, _cfg(memory_mode=request.param))
+
+
+@pytest.fixture(scope="module")
+def pageann_hybrid(dataset):
+    x, _, _ = dataset
+    return PageANNIndex.build(x, _cfg())
+
+
+# ------------------------------------------------------------- persistence
+def test_save_load_bit_identical_every_mode(tmp_path, dataset, mode_index):
+    """The acceptance bar: save(dir) -> load(dir) -> search returns
+    bit-identical ids/dists/ios/hops/cache_hits on every MemoryMode."""
+    _, q, _ = dataset
+    art = str(tmp_path / "idx.pageann")
+    mode_index.save(art)
+    loaded = PageANNIndex.load(art)
+    assert loaded.cfg == mode_index.cfg
+    # host-side views recovered from (or, for MEM_ALL codes, alongside)
+    # the page file match the originals exactly
+    np.testing.assert_array_equal(loaded.store.vecs, mode_index.store.vecs)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.store.nbr_codes),
+        np.asarray(mode_index.store.nbr_codes),
+    )
+    want = mode_index.search(q, k=10)
+    got = loaded.search(q, k=10)
+    for field in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(want, field)),
+            np.asarray(getattr(got, field)),
+            err_msg=field,
+        )
+
+
+def test_page_file_is_page_aligned_and_memmap_readable(tmp_path, pageann_hybrid):
+    """pages.bin is the literal paper disk layout: raw page records, each a
+    whole number of 4 KB pages, readable via np.memmap without the
+    sidecars."""
+    idx = pageann_hybrid
+    art = str(tmp_path / "idx.pageann")
+    idx.save(art)
+
+    with open(os.path.join(art, "manifest.json")) as f:
+        doc = json.load(f)
+    rec_bytes = doc["page_record_bytes"]
+    assert rec_bytes % 4096 == 0                       # page-aligned records
+    path = os.path.join(art, "pages.bin")
+    assert os.path.getsize(path) == doc["pages"] * rec_bytes
+
+    mm = np.memmap(
+        path, dtype=np.float32, mode="r",
+        shape=(doc["pages"], doc["record_rows"], doc["record_lanes"]),
+    )
+    np.testing.assert_array_equal(np.asarray(mm), np.asarray(idx.store.recs))
+    # host-side member vectors are recovered from the page file itself
+    np.testing.assert_array_equal(
+        unpack_member_vectors(mm, doc["capacity"], doc["dim"]),
+        idx.store.vecs,
+    )
+
+
+def test_unpack_member_vectors_inverts_pack_high_dim():
+    rng = np.random.default_rng(3)
+    for d in (32, 100, 160, 300):
+        cap = 5
+        vecs = rng.standard_normal((4, cap, d)).astype(np.float32)
+        codes = rng.integers(0, 256, (4, 7, 8)).astype(np.uint8)
+        recs = pack_page_records(vecs, codes)
+        np.testing.assert_array_equal(
+            unpack_member_vectors(recs, cap, d), vecs
+        )
+
+
+def test_manifest_version_guard(tmp_path, pageann_hybrid):
+    idx = pageann_hybrid
+    art = str(tmp_path / "idx.pageann")
+    idx.save(art)
+    path = os.path.join(art, "manifest.json")
+    with open(path) as f:
+        doc = json.load(f)
+    doc["version"] = 999
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(ValueError, match="version"):
+        PageANNIndex.load(art)
+
+
+# ---------------------------------------------------------- SearchParams
+def test_params_sweep_reuses_one_index(dataset, pageann_hybrid):
+    """A recall-vs-beam sweep is per-call SearchParams over ONE build; the
+    curve is monotone in I/O and matches per-point k overrides."""
+    _, q, _ = dataset
+    idx = pageann_hybrid
+    ios = []
+    for beam, entries in ((16, 4), (48, 8), (96, 12)):
+        p = SearchParams(
+            k=10, beam_width=beam, lsh_entries=entries, max_hops=48
+        )
+        ios.append(float(idx.search(q, params=p).ios.mean()))
+    assert ios == sorted(ios)
+    # k override rides on top of params without another dataclass
+    p = SearchParams(k=10, beam_width=48, lsh_entries=8, max_hops=48)
+    r5 = idx.search(q, k=5, params=p)
+    assert r5.ids.shape == (Q, 5)
+
+
+def test_search_params_validation():
+    with pytest.raises(ValueError):
+        SearchParams(k=0)
+    # beam < lsh_entries is constructible (baselines never consult the LSH
+    # router) — the PageANN search path enforces it at call time
+    SearchParams(beam_width=8, lsh_entries=16)
+    # hashable == usable as a static jit arg / dict key
+    assert hash(SearchParams()) == hash(SearchParams())
+
+
+def test_pageann_rejects_beam_below_lsh_entries(dataset, pageann_hybrid):
+    _, q, _ = dataset
+    idx = pageann_hybrid
+    with pytest.raises(ValueError, match="lsh_entries"):
+        idx.search(q, params=SearchParams(beam_width=8, lsh_entries=16))
+
+
+def test_baselines_accept_low_beam(dataset, baseline_parts):
+    x, q, _ = dataset
+    nbrs, books = baseline_parts
+    idx = bl.DiskANNIndex.from_data(x, nbrs, books)
+    res = idx.search(q, params=SearchParams(k=5, beam_width=8, max_hops=48))
+    assert res.ids.shape == (Q, 5)
+
+
+# -------------------------------------------------------------- protocol
+@pytest.fixture(scope="module")
+def baseline_parts(dataset):
+    x, _, _ = dataset
+    nbrs = build_vamana(x, degree=12, beam=24, seed=0)
+    books = np.asarray(pq_mod.train_pq(x, 8, 256, 6))
+    return nbrs, books
+
+
+def test_all_systems_implement_vector_index(dataset, baseline_parts, pageann_hybrid):
+    x, _, _ = dataset
+    nbrs, books = baseline_parts
+    systems = [
+        pageann_hybrid,
+        bl.DiskANNIndex.from_data(x, nbrs, books),
+        bl.StarlingIndex.build(x, _cfg()),
+    ]
+    for idx in systems:
+        assert isinstance(idx, VectorIndex), type(idx)
+        assert idx.dim == D
+
+
+def test_baselines_search_through_protocol(dataset, baseline_parts):
+    """Both baselines speak search(queries, k, params) and agree with the
+    raw functional entry points they wrap."""
+    x, q, truth = dataset
+    nbrs, books = baseline_parts
+    idx = bl.DiskANNIndex.from_data(x, nbrs, books)
+    params = SearchParams(k=10, beam_width=64, max_hops=48)
+    res = idx.search(q, params=params)
+    assert recall_at_k(res.ids, truth) >= 0.8
+    assert (res.cache_hits == 0).all()
+    raw = bl.diskann_search(
+        np.asarray(q, np.float32), idx.data, beam=64, k=10, max_hops=48
+    )
+    np.testing.assert_array_equal(res.ids, np.asarray(raw.ids))
+    np.testing.assert_array_equal(res.ios, np.asarray(raw.ios))
+
+
+def test_baseline_save_load_round_trip(tmp_path, dataset, baseline_parts):
+    x, q, _ = dataset
+    nbrs, books = baseline_parts
+    idx = bl.StarlingIndex.build(x, _cfg())
+    art = str(tmp_path / "idx.starling")
+    idx.save(art)
+    loaded = load_index(art)                    # kind-dispatched reload
+    assert type(loaded) is bl.StarlingIndex
+    params = SearchParams(k=10, beam_width=48, max_hops=48)
+    want = idx.search(q, params=params)
+    got = loaded.search(q, params=params)
+    for field in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(want, field)),
+            np.asarray(getattr(got, field)),
+            err_msg=field,
+        )
+
+
+def test_load_index_dispatches_pageann(tmp_path, dataset, pageann_hybrid):
+    _, q, _ = dataset
+    idx = pageann_hybrid
+    art = str(tmp_path / "idx.pageann")
+    idx.save(art)
+    loaded = load_index(art)
+    assert type(loaded) is PageANNIndex
+    np.testing.assert_array_equal(
+        loaded.search(q, k=5).ids, idx.search(q, k=5).ids
+    )
+
+
+def test_load_rejects_non_index_dir(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_index(str(tmp_path))
+    assert not persist.is_index_dir(str(tmp_path))

@@ -7,7 +7,13 @@ import numpy as np
 import pytest
 
 import seed_search_ref
-from repro.core import MemoryMode, PageANNConfig, PageANNIndex, recall_at_k
+from repro.core import (
+    MemoryMode,
+    PageANNConfig,
+    PageANNIndex,
+    SearchParams,
+    recall_at_k,
+)
 from repro.core.vamana import brute_force_knn
 from repro.data.pipeline import clustered_vectors, query_vectors
 
@@ -74,7 +80,7 @@ def test_optimized_loop_matches_seed_search(dataset, mode_index):
     memory-disk coordination mode."""
     _, q, _ = dataset
     qj = jnp.asarray(q, jnp.float32)
-    got = mode_index._raw_search(qj, k=10)
+    got = mode_index._raw_search(qj, mode_index.resolve_params(10, None))
     want = seed_search_ref.seed_batch_search(qj, mode_index, k=10)
     np.testing.assert_array_equal(np.asarray(got.ios), np.asarray(want.ios))
     np.testing.assert_array_equal(np.asarray(got.hops), np.asarray(want.hops))
@@ -122,16 +128,88 @@ def test_results_sorted_and_unique(dataset, hybrid_index):
         assert len(np.unique(ids)) == len(ids)
 
 
-def test_beam_width_trades_io_for_recall(dataset):
+def test_beam_width_trades_io_for_recall(dataset, hybrid_index):
+    """Runtime knobs are per-call SearchParams: the whole beam sweep runs
+    over ONE built index, and a point of that sweep is bit-identical to an
+    index whose build config froze the same knobs."""
     x, q, truth = dataset
-    lo = PageANNIndex.build(x, _cfg(beam_width=16, lsh_entries=4))
-    hi = PageANNIndex.build(x, _cfg(beam_width=96, lsh_entries=16))
-    r_lo = recall_at_k(lo.search(q, k=10).ids, truth)
-    r_hi = recall_at_k(hi.search(q, k=10).ids, truth)
-    io_lo = lo.search(q, k=10).ios.mean()
-    io_hi = hi.search(q, k=10).ios.mean()
-    assert r_hi >= r_lo
-    assert io_hi >= io_lo
+    lo = SearchParams(k=10, beam_width=16, lsh_entries=4, max_hops=48)
+    hi = SearchParams(k=10, beam_width=96, lsh_entries=16, max_hops=48)
+    res_lo = hybrid_index.search(q, params=lo)
+    res_hi = hybrid_index.search(q, params=hi)
+    assert recall_at_k(res_hi.ids, truth) >= recall_at_k(res_lo.ids, truth)
+    assert res_hi.ios.mean() >= res_lo.ios.mean()
+
+    # the config's knobs are only defaults for the same runtime path:
+    # a config-frozen build must reproduce the per-call sweep point exactly
+    frozen = PageANNIndex.build(x, _cfg(beam_width=16, lsh_entries=4))
+    res_frozen = frozen.search(q, k=10)
+    for field in res_lo._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_lo, field)),
+            np.asarray(getattr(res_frozen, field)),
+            err_msg=field,
+        )
+
+
+def test_build_warmup_queries_populate_cache(dataset):
+    """Sec 4.3 warm path: build(..., warmup_queries=...) with cache_pages>0
+    must leave a populated page cache, and repeat queries must convert
+    disk reads into cache hits without changing the read schedule."""
+    import dataclasses as dc
+
+    from repro.core import search as search_mod
+
+    x, q, _ = dataset
+    idx = PageANNIndex.build(x, _cfg(cache_pages=32), warmup_queries=q)
+    cached = np.asarray(idx.tier.cached_pages)
+    assert 0 < cached.size <= 32
+    assert (np.diff(cached) > 0).all()          # sorted, unique page ids
+
+    warm = idx.search(q, k=10)                  # repeat of the warmup batch
+    assert warm.cache_hits.sum() > 0
+
+    # against the same index with the cache emptied: hits come out of ios
+    # one for one (the cache reclassifies reads, never reorders them)
+    cold_tier = dc.replace(
+        idx.tier, cached_pages=jnp.zeros((0,), jnp.int32)
+    )
+    cold_data = search_mod.make_search_data(idx.store, cold_tier, idx.lsh)
+    cold = search_mod.batch_search(
+        jnp.asarray(q, jnp.float32),
+        cold_data,
+        idx.resolve_params(10, None),
+        capacity=idx.store.capacity,
+        mode=idx.cfg.memory_mode.value,
+    )
+    assert np.asarray(cold.cache_hits).sum() == 0
+    np.testing.assert_array_equal(
+        np.asarray(warm.ios) + np.asarray(warm.cache_hits),
+        np.asarray(cold.ios),
+    )
+    assert warm.ios.sum() < np.asarray(cold.ios).sum()
+
+
+def _recall_reference_loop(found_ids, truth_ids):
+    """The pre-vectorization recall_at_k: per-query python set intersection."""
+    hits = 0
+    q, k = truth_ids.shape
+    for i in range(q):
+        hits += len(set(found_ids[i].tolist()) & set(truth_ids[i].tolist()))
+    return hits / (q * k)
+
+
+def test_recall_at_k_matches_reference_loop():
+    rng = np.random.default_rng(7)
+    for _ in range(40):
+        qn = int(rng.integers(1, 8))
+        kt = int(rng.integers(1, 12))
+        kf = int(rng.integers(1, 12))           # found width may differ
+        found = rng.integers(-1, 15, (qn, kf))  # duplicates and PAD included
+        truth = rng.integers(-1, 15, (qn, kt))
+        assert recall_at_k(found, truth) == pytest.approx(
+            _recall_reference_loop(found, truth), abs=1e-12
+        )
 
 
 def test_high_dim_vectors_span_multiple_record_rows():

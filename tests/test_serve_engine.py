@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import MemoryMode, PageANNConfig, PageANNIndex
+from repro.core import MemoryMode, PageANNConfig, PageANNIndex, SearchParams
 from repro.core import search as search_mod
 from repro.core.search import SearchResult, _mask_dups_keep_first
 from repro.data.pipeline import clustered_vectors, query_vectors
@@ -34,16 +34,18 @@ def index():
     return PageANNIndex.build(x, cfg)
 
 
-def _toy_search_fn(seen_shapes):
+def _toy_search_fn(seen_shapes, seen_knobs=None):
     """Deterministic per-row backend: row i's ids encode round(q[i, 0])."""
 
-    def fn(q):
+    def fn(q, k, params):
         seen_shapes.append(np.asarray(q).shape)
+        if seen_knobs is not None:
+            seen_knobs.append((k, params))
         b = q.shape[0]
         tag = jnp.round(q[:, :1]).astype(jnp.int32)
         return SearchResult(
-            ids=tag + jnp.arange(3)[None],
-            dists=q.sum(1)[:, None] + jnp.arange(3)[None].astype(jnp.float32),
+            ids=tag + jnp.arange(k)[None],
+            dists=q.sum(1)[:, None] + jnp.arange(k)[None].astype(jnp.float32),
             ios=jnp.full((b,), 2, jnp.int32),
             hops=jnp.ones((b,), jnp.int32),
             cache_hits=jnp.zeros((b,), jnp.int32),
@@ -98,7 +100,7 @@ def test_timeout_flush_without_explicit_flush():
 
 
 def test_backend_failure_reaches_every_future():
-    def boom(q):
+    def boom(q, k, params):
         raise RuntimeError("backend down")
 
     eng = BatchingEngine(boom, dim=4, batch_size=2)
@@ -125,16 +127,133 @@ def test_engine_from_index_matches_direct_search(index):
     assert eng.metrics().requests == 9
 
 
+# ------------------------------------------------- per-request k / params
+def test_per_request_k_binning_and_param_groups():
+    """Distinct (k-bin, params) requests form their own fixed-shape
+    dispatches; k below a bin is rounded up and the result trimmed."""
+    shapes, knobs = [], []
+    eng = BatchingEngine(
+        _toy_search_fn(shapes, knobs), dim=4, batch_size=4,
+        default_k=5, k_bins=(5, 8),
+    )
+    wide = SearchParams(k=5, beam_width=128)
+    futs = [eng.submit(np.full(4, i, np.float32)) for i in range(4)]
+    f_small = eng.submit(np.full(4, 9.0, np.float32), k=3)   # binned up to 5
+    f_eight = eng.submit(np.full(4, 7.0, np.float32), k=7)   # binned up to 8
+    f_wide = eng.submit(np.full(4, 5.0, np.float32), params=wide)
+    f_tall = eng.submit(np.full(4, 6.0, np.float32), k=12)   # above the grid
+    eng.flush()
+
+    for i, f in enumerate(futs):
+        assert f.result(timeout=30).result.ids.shape == (5,)
+        assert f.result(timeout=30).result.ids[0] == i
+    assert f_small.result(timeout=30).result.ids.shape == (3,)   # trimmed
+    np.testing.assert_array_equal(
+        f_small.result(timeout=30).result.ids, 9 + np.arange(3)
+    )
+    assert f_eight.result(timeout=30).result.ids.shape == (7,)
+    assert f_wide.result(timeout=30).result.ids.shape == (5,)
+    assert f_tall.result(timeout=30).result.ids.shape == (12,)
+    # the four default requests shared one dispatch; the other four knob
+    # combinations each formed their own fixed-shape group
+    ks = sorted(k for k, _ in knobs)
+    assert ks == [5, 5, 5, 8, 12]
+    assert sum(1 for _, p in knobs if p is wide) == 1
+    assert eng.metrics().requests == 8
+
+
+def test_timer_survives_other_groups_size_dispatch():
+    """A size-triggered dispatch of one (k-bin, params) group must not
+    strand another group's pending request: the timeout timer is re-armed
+    while any group still holds waiters."""
+    eng = BatchingEngine(
+        _toy_search_fn([]), dim=4, batch_size=2, timeout_ms=30.0, default_k=3
+    )
+    slow = eng.submit(np.zeros(4, np.float32))          # default group, waits
+    # fill a DIFFERENT group to its size trigger (cancels the live timer)
+    for _ in range(2):
+        eng.submit(np.ones(4, np.float32), k=8)
+    r = slow.result(timeout=5)                          # timeout must fire
+    assert r.batch_size == 1
+    eng.close()
+
+
+def test_sparse_group_not_starved_by_steady_traffic():
+    """The timeout deadline tracks the OLDEST pending submit: steady
+    size-triggered dispatches of another group must not keep pushing a
+    sparse group's flush out to a fresh full timeout each time."""
+    import threading
+    import time as time_mod
+
+    eng = BatchingEngine(
+        _toy_search_fn([]), dim=4, batch_size=2, timeout_ms=100.0, default_k=3
+    )
+    resolved_at = []
+    t0 = time_mod.perf_counter()
+    slow = eng.submit(np.zeros(4, np.float32), k=5)      # sparse group
+    slow.add_done_callback(
+        lambda _: resolved_at.append(time_mod.perf_counter() - t0)
+    )
+    for _ in range(10):                                  # ~500ms of churn
+        for _ in range(2):                               # size-dispatch
+            eng.submit(np.ones(4, np.float32))
+        time_mod.sleep(0.05)
+    slow.result(timeout=5)
+    eng.close()
+    # with deadline-resetting timers this resolves only after the churn
+    # stops (~0.6s); with the oldest-submit deadline it fires at ~0.1s
+    assert resolved_at and resolved_at[0] < 0.35, resolved_at
+
+
+def test_drained_groups_do_not_accumulate():
+    eng = BatchingEngine(_toy_search_fn([]), dim=4, batch_size=1)
+    for k in range(1, 30):
+        eng.submit(np.zeros(4, np.float32), k=k).result(timeout=30)
+    assert len(eng._pending) == 0
+    eng.close()
+
+
+def test_params_k_respected_without_k_kwarg():
+    """submit(query, params=SearchParams(k=...)) without the k kwarg must
+    honor the params' k, not the engine default."""
+    knobs = []
+    eng = BatchingEngine(
+        _toy_search_fn([], knobs), dim=4, batch_size=1, default_k=3
+    )
+    fut = eng.submit(np.zeros(4, np.float32), params=SearchParams(k=7))
+    assert fut.result(timeout=30).result.ids.shape == (7,)
+    assert knobs[0][0] == 7
+    eng.close()
+
+
+def test_per_request_params_match_direct_search(index):
+    """An engine request carrying its own SearchParams returns exactly what
+    a direct protocol search with those params returns."""
+    x = clustered_vectors(N, D, num_clusters=16, seed=0)
+    q = query_vectors(x, 3, seed=5)
+    params = SearchParams(k=4, beam_width=16, lsh_entries=4, max_hops=48)
+    want = index.search(q, params=params)
+    eng = BatchingEngine.from_index(index, k=4, batch_size=8)
+    rows = eng.search(q, params=params)
+    np.testing.assert_array_equal(
+        np.stack([r.result.ids for r in rows]), want.ids
+    )
+    np.testing.assert_array_equal(
+        np.stack([r.result.ios for r in rows]), want.ios
+    )
+
+
 # ----------------------------------------------------------- shard_search
 def test_shard_search_parity_on_1device_mesh(index):
     q = jnp.asarray(
         query_vectors(clustered_vectors(N, D, num_clusters=16, seed=0), 7, seed=2),
         jnp.float32,
     )
-    kw = search_mod.search_kwargs(index.cfg, index.store.capacity)
-    ref = search_mod.batch_search(q, index.data, k=10, **kw)
+    params = index.resolve_params(10, None)
+    kw = dict(capacity=index.store.capacity, mode=index.cfg.memory_mode.value)
+    ref = search_mod.batch_search(q, index.data, params, **kw)
     got = search_mod.shard_search(
-        q, index.data, mesh=make_host_mesh(), k=10, **kw
+        q, index.data, params, mesh=make_host_mesh(), **kw
     )
     for field in SearchResult._fields:
         a = np.asarray(getattr(ref, field))
@@ -163,9 +282,12 @@ def test_search_loop_routes_through_kernel_ops(index, monkeypatch):
     monkeypatch.setattr(ops, "page_scan", spy_ps)
     monkeypatch.setattr(ops, "pq_adc", spy_adc)
     q = jnp.asarray(np.zeros((2, D), np.float32))
-    kw = search_mod.search_kwargs(index.cfg, index.store.capacity)
     # k=9 is used nowhere else with this index, so jit must re-trace here
-    search_mod.batch_search(q, index.data, k=9, **kw)
+    search_mod.batch_search(
+        q, index.data, index.resolve_params(9, None),
+        capacity=index.store.capacity,
+        mode=index.cfg.memory_mode.value,
+    )
     assert calls["page_scan"] >= 1
     assert calls["pq_adc"] >= 1
 
