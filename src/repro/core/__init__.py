@@ -1,11 +1,22 @@
 """PageANN core: the paper's contribution as composable JAX modules."""
-from repro.core.config import MemoryMode, PageANNConfig, SearchParams
+from repro.core.config import (
+    DeltaParams,
+    MemoryMode,
+    PageANNConfig,
+    SearchParams,
+)
+from repro.core.delta import DeltaTier, MutableIndex
 from repro.core.index import PageANNIndex, recall_at_k
-from repro.core.persist import load_index
-from repro.core.protocol import VectorIndex
+from repro.core.persist import IndexFormatError, load_index
+from repro.core.protocol import MutableVectorIndex, VectorIndex
 
 __all__ = [
+    "DeltaParams",
+    "DeltaTier",
+    "IndexFormatError",
     "MemoryMode",
+    "MutableIndex",
+    "MutableVectorIndex",
     "PageANNConfig",
     "PageANNIndex",
     "SearchParams",

@@ -89,6 +89,37 @@ def resolve_search_params(
 
 
 @dataclasses.dataclass(frozen=True)
+class DeltaParams:
+    """Knobs of the mutable-index delta tier (``repro.core.delta``).
+
+    The delta tier keeps freshly inserted vectors in memory and deleted ids
+    as tombstones; the page-aligned disk artifact stays frozen until
+    compaction folds the delta back in. These knobs bound the two costs the
+    tier introduces: the brute-force scan over the delta, and the top-k
+    oversampling that compensates for tombstoned base results.
+    """
+
+    # delta live-vector count / base live-vector count above which
+    # ``MutableIndex.insert`` triggers an automatic ``compact()`` (set to
+    # None / rely on explicit compact() by passing auto_compact=False)
+    compact_fraction: float = 0.25
+    # base-search k is oversampled by the tombstone count rounded up to a
+    # power of two so jit shapes stay bounded; this caps the bucket — past
+    # it, heavily-deleted results may crowd out live ones until compaction
+    max_tombstone_oversample: int = 256
+    # initial delta buffer capacity (rows); grows by doubling
+    min_capacity: int = 256
+
+    def __post_init__(self):
+        if not 0.0 < self.compact_fraction:
+            raise ValueError("compact_fraction must be positive")
+        if self.max_tombstone_oversample < 1:
+            raise ValueError("max_tombstone_oversample must be >= 1")
+        if self.min_capacity < 1:
+            raise ValueError("min_capacity must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
 class PageANNConfig:
     dim: int
     # --- Vamana vector-graph build (Sec 4.1 starts from a Vamana graph) ---

@@ -51,6 +51,13 @@ class BuildStats:
     logical_page_bytes: int
     padded_tile_bytes: int
     memory_bytes: int
+    # total bytes of the disk tier. For a freshly built index this is the
+    # projected pages.bin size (pages * padded_tile_bytes); for an index
+    # loaded via memmap, persist.load_pageann overwrites it with the actual
+    # on-disk size of the persisted artifact — stats reports what the file
+    # occupies, not a recomputation from device arrays. Defaults to 0 for
+    # manifests written before the field existed.
+    disk_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -145,6 +152,7 @@ class PageANNIndex:
                 logical_page_bytes=store.logical_page_bytes(cfg),
                 padded_tile_bytes=store.padded_tile_bytes(),
                 memory_bytes=tier.memory_bytes + lsh.memory_bytes,
+                disk_bytes=store.num_pages * store.padded_tile_bytes(),
             ),
         )
         if warmup_queries is not None and cfg.cache_pages > 0:
@@ -196,6 +204,17 @@ class PageANNIndex:
             capacity=self.store.capacity,
             mode=self.cfg.memory_mode.value,
         )
+
+    def vectors_by_original_id(self) -> np.ndarray:
+        """Member vectors in ORIGINAL id order: the inverse of the build's
+        page packing/id reassignment, recovered from the page store (which
+        holds the vectors verbatim as f32 — exact round trip). This is the
+        dataset a compaction (``core.delta``) merges fresh inserts into."""
+        flat = np.asarray(self.store.vecs).reshape(-1, self.store.dim)
+        valid = self.store.new_to_old >= 0
+        out = np.empty((self.store.num_vectors, self.store.dim), np.float32)
+        out[self.store.new_to_old[valid]] = flat[valid]
+        return out
 
     def translate_ids(self, ids: np.ndarray) -> np.ndarray:
         """Reassigned (page-packed) vector ids -> original ids, PAD kept."""

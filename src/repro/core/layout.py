@@ -67,7 +67,9 @@ class PageStore:
 
     @property
     def num_vectors(self) -> int:
-        return int(self.new_to_old.shape[0])
+        """Real (non-pad) vectors in the store; ``new_to_old`` is longer —
+        it has a row per page *slot*, PAD where a slot is empty."""
+        return int(self.old_to_new.shape[0])
 
     def logical_page_bytes(self, cfg: PageANNConfig) -> int:
         """Bytes per page under the paper's Sec 4.2 equation (pre-padding)."""

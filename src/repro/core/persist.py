@@ -15,8 +15,16 @@ the saved artifact mirrors it literally:
 ``save_index`` / ``load_index`` round-trip a :class:`PageANNIndex` to
 bit-identical ``SearchResult``s; ``load_index`` dispatches on the
 manifest's ``kind`` so any :class:`repro.core.protocol.VectorIndex`
-implementation (PageANN or the DiskANN/Starling baselines) reloads through
-one entry point. Host-side views that the search path never touches
+implementation (PageANN, the DiskANN/Starling baselines, or a mutable
+index) reloads through one entry point. A mutable index
+(:class:`repro.core.delta.MutableIndex`) persists as kind="mutable": the
+frozen base as a nested artifact under ``base/`` plus a ``delta.npz``
+sidecar (inserted vectors + liveness + tombstones + external id map) and a
+manifest ``generation`` counter; compaction replaces the whole directory
+atomically (``swap_mutable``: sibling tmp dir + two renames). Unreadable
+artifacts — truncated ``pages.bin``, garbled manifests, versions ahead of
+this build — raise :class:`IndexFormatError` naming what was found vs
+supported. Host-side views that the search path never touches
 (``PageStore.vecs`` / ``PageStore.nbr_codes``) are *not* persisted — they
 are unpacked from the page file itself (``layout.unpack_member_vectors`` /
 ``unpack_neighbor_codes``), keeping the artifact a single copy of the disk
@@ -43,6 +51,15 @@ VERSION = 1
 MANIFEST = "manifest.json"
 PAGES_BIN = "pages.bin"
 ARRAYS_NPZ = "arrays.npz"
+DELTA_NPZ = "delta.npz"
+BASE_SUBDIR = "base"
+
+
+class IndexFormatError(ValueError):
+    """A saved index artifact this library cannot read: corrupted or
+    truncated files, a missing/garbled manifest, or a format version ahead
+    of what this build supports. Subclasses ``ValueError`` so older
+    call sites catching that keep working."""
 
 
 def is_index_dir(directory: str) -> bool:
@@ -59,16 +76,43 @@ def read_manifest(directory: str) -> dict:
     path = os.path.join(directory, MANIFEST)
     if not os.path.isfile(path):
         raise FileNotFoundError(f"no index manifest at {path}")
-    with open(path) as f:
-        doc = json.load(f)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except json.JSONDecodeError as e:
+        raise IndexFormatError(f"{path}: manifest is not valid JSON: {e}")
     if doc.get("format") != FORMAT:
-        raise ValueError(f"{path}: not a {FORMAT} manifest")
-    if doc.get("version") != VERSION:
-        raise ValueError(
-            f"{path}: format version {doc.get('version')} "
-            f"(this build reads version {VERSION})"
+        raise IndexFormatError(f"{path}: not a {FORMAT} manifest")
+    found = doc.get("version")
+    if found != VERSION:
+        ahead = isinstance(found, int) and found > VERSION
+        hint = (
+            "; artifact was written by a newer library — upgrade to read it"
+            if ahead else ""
+        )
+        raise IndexFormatError(
+            f"{path}: found format version {found}, this build supports "
+            f"version {VERSION}{hint}"
         )
     return doc
+
+
+def _check_pages_bin(directory: str, doc: dict) -> str:
+    """The page file must exist and hold exactly the manifest's geometry —
+    a truncated copy must fail loudly here, not as a numpy reshape error
+    deep in ``np.memmap``."""
+    path = os.path.join(directory, PAGES_BIN)
+    if not os.path.isfile(path):
+        raise IndexFormatError(f"{path}: missing page file")
+    want = doc["pages"] * doc["record_rows"] * doc["record_lanes"] * 4
+    got = os.path.getsize(path)
+    if got != want:
+        raise IndexFormatError(
+            f"{path}: corrupted or truncated page file — {got} bytes on "
+            f"disk, manifest geometry needs {want} "
+            f"({doc['pages']} pages x {doc['page_record_bytes']} B)"
+        )
+    return path
 
 
 def config_to_json(cfg: PageANNConfig) -> dict:
@@ -129,6 +173,9 @@ def save_pageann(index, directory: str) -> None:
             capacity=store.capacity,
             dim=store.dim,
             stats=dataclasses.asdict(index.stats),
+            # warm-cache persistence: the hot page ids ride the manifest so
+            # a loaded server starts with the builder's warmed cache
+            hot_pages=np.asarray(tier.cached_pages).tolist(),
         ),
     )
 
@@ -144,8 +191,9 @@ def load_pageann(directory: str):
     cfg = config_from_json(doc["config"])
 
     # the literal paper disk layout: raw page-aligned records via memmap
+    pages_path = _check_pages_bin(directory, doc)
     recs_mm = np.memmap(
-        os.path.join(directory, PAGES_BIN),
+        pages_path,
         dtype=np.float32,
         mode="r",
         shape=(doc["pages"], doc["record_rows"], doc["record_lanes"]),
@@ -174,12 +222,18 @@ def load_pageann(directory: str):
         new_to_old=arrays["new_to_old"],
         old_to_new=arrays["old_to_new"],
     )
+    # warm-cache persistence: the manifest's hot page ids pre-populate the
+    # cache so a restarted server serves the first query warm (the npz copy
+    # is the fallback for artifacts saved before hot_pages existed)
+    hot = np.asarray(
+        doc.get("hot_pages", arrays["cached_pages"]), np.int32
+    )
     tier = layout_mod.MemoryTier(
         mem_codes=jnp.asarray(arrays["mem_codes"]),
         mem_mask=jnp.asarray(arrays["mem_mask"]),
         mem_codebooks=jnp.asarray(arrays["mem_codebooks"]),
         disk_codebooks=jnp.asarray(arrays["disk_codebooks"]),
-        cached_pages=jnp.asarray(arrays["cached_pages"]),
+        cached_pages=jnp.asarray(np.sort(hot)),
     )
     lsh = LSHIndex(
         planes=jnp.asarray(arrays["lsh_planes"]),
@@ -187,14 +241,131 @@ def load_pageann(directory: str):
         sample_codes=jnp.asarray(arrays["lsh_sample_codes"]),
         sample_pq=jnp.asarray(arrays["lsh_sample_pq"]),
     )
+    # stats.disk_bytes reports the persisted artifact as it sits on disk,
+    # not a recomputation from device arrays (see BuildStats docstring)
+    stats = BuildStats(**doc["stats"])
+    stats.disk_bytes = os.path.getsize(pages_path)
     return PageANNIndex(
         cfg=cfg,
         store=store,
         tier=tier,
         lsh=lsh,
         data=search_mod.make_search_data(store, tier, lsh),
-        stats=BuildStats(**doc["stats"]),
+        stats=stats,
     )
+
+
+# ----------------------------------------------------------------- mutable
+def save_mutable(state, directory: str) -> None:
+    """Write a :class:`repro.core.delta.MutableIndex` state under
+    ``directory``: the frozen base as a full nested artifact plus a
+    ``delta.npz`` sidecar (inserted vectors, liveness, tombstones, external
+    id map) — a restarted server reloads the dirty index losslessly."""
+    os.makedirs(directory, exist_ok=True)
+    state.base.save(os.path.join(directory, BASE_SUBDIR))
+    dv = state.delta
+    c = dv.count
+    np.savez(
+        os.path.join(directory, DELTA_NPZ),
+        delta_vecs=np.asarray(dv.vecs[:c], np.float32),
+        delta_ids=np.asarray(dv.ids[:c], np.int64),
+        delta_live=np.asarray(dv.live[:c], bool),
+        tombstones=np.asarray(state.tombstones, np.int64),
+        base_ids=np.asarray(state.base_ids, np.int64),
+    )
+    write_manifest(
+        directory,
+        dict(
+            kind="mutable",
+            base_kind=read_manifest(os.path.join(directory, BASE_SUBDIR))[
+                "kind"
+            ],
+            dim=state.base.dim,
+            generation=state.generation,
+            base_rows=int(state.base_ids.size),
+            delta_rows=int(c),
+            delta_live=int(dv.n_live),
+            tombstones=int(state.tombstones.size),
+        ),
+    )
+
+
+def swap_mutable(state, directory: str) -> None:
+    """Replace the artifact at ``directory`` with ``state`` (the
+    compaction swap): write a sibling tmp dir, then two renames. Both
+    sides of the swap are always intact on disk — no reader ever sees a
+    half-written directory, and in-process readers holding memmaps of the
+    old files keep valid fds. The canonical path is briefly absent between
+    the two renames: a crash in that window leaves the previous artifact
+    complete under ``<dir>.old.<gen>`` (and the new one under
+    ``<dir>.tmp.<gen>``); the next swap — or a manual rename — recovers
+    it. Stale ``.tmp``/``.old`` siblings from any crashed earlier swap are
+    swept first."""
+    import glob
+    import shutil
+
+    clean = directory.rstrip(os.sep)
+    for leftover in glob.glob(f"{glob.escape(clean)}.tmp.*") + glob.glob(
+        f"{glob.escape(clean)}.old.*"
+    ):
+        if os.path.isdir(leftover):
+            shutil.rmtree(leftover)
+    tmp = f"{clean}.tmp.{state.generation}"
+    old = f"{clean}.old.{state.generation}"
+    save_mutable(state, tmp)
+    os.rename(clean, old)
+    os.rename(tmp, clean)
+    shutil.rmtree(old)
+
+
+def load_mutable(directory: str):
+    """Reload a saved mutable index (base + delta sidecar); searches on
+    the loaded index are bit-identical to the saved dirty state."""
+    from repro.core.delta import MutableIndex
+
+    doc = read_manifest(directory)
+    if doc["kind"] != "mutable":
+        raise ValueError(
+            f"{directory}: kind={doc['kind']!r}, not a mutable index"
+        )
+    base = load_index(os.path.join(directory, BASE_SUBDIR))
+    npz_path = os.path.join(directory, DELTA_NPZ)
+    if not os.path.isfile(npz_path):
+        raise IndexFormatError(f"{npz_path}: missing delta sidecar")
+    with np.load(npz_path) as z:
+        arrays = {name: z[name] for name in z.files}
+
+    index = MutableIndex(base, base_ids=arrays["base_ids"])
+    live = arrays["delta_live"]
+    if live.size:
+        # restore the append log verbatim (the log may hold dead rows for
+        # superseded/deleted ids): slot numbering — and thus scan output —
+        # is bit-identical to the saved index
+        c = int(live.size)
+        tier = index._delta
+        tier._grow(c)
+        tier._vecs[:c] = arrays["delta_vecs"]
+        tier._ids[:c] = arrays["delta_ids"]
+        tier._live[:c] = live
+        tier._count = c
+        tier._slot_of = {
+            int(arrays["delta_ids"][i]): i for i in range(c) if live[i]
+        }
+        tier._view = None
+    index._state = index._state._replace(
+        tombstones=np.asarray(arrays["tombstones"], np.int64),
+        delta=index._delta.snapshot(),
+        generation=int(doc.get("generation", 0)),
+    )
+    index._next_id = int(
+        max(
+            arrays["base_ids"].max(initial=-1),
+            arrays["delta_ids"].max(initial=-1),
+        )
+        + 1
+    )
+    index._directory = directory
+    return index
 
 
 # ----------------------------------------------------------------- dispatch
@@ -205,6 +376,8 @@ def load_index(directory: str):
     kind = read_manifest(directory)["kind"]
     if kind == "pageann":
         return load_pageann(directory)
+    if kind == "mutable":
+        return load_mutable(directory)
     if kind in bl.BASELINE_KINDS:
         return bl.load_baseline(directory)
     raise ValueError(f"{directory}: unknown index kind {kind!r}")

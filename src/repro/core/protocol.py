@@ -13,8 +13,16 @@ implementation-agnostic:
   * ``save(directory)`` — persist the index artifact to disk.
   * ``load(directory)`` (classmethod) — reload it; searches on the loaded
     index are bit-identical to the saved one.
-  * ``stats`` — build/footprint statistics object.
+  * ``stats`` — build/footprint statistics object. Disk footprint numbers
+    describe the artifact as persisted: an index loaded via memmap reports
+    the actual on-disk byte size of its page file
+    (``BuildStats.disk_bytes``), not a recomputation from device arrays.
   * ``dim`` — vector dimensionality accepted by ``search``.
+
+:class:`MutableVectorIndex` extends the contract with writes —
+``insert`` / ``delete`` / ``compact`` — implemented by
+:class:`repro.core.delta.MutableIndex` (in-memory delta tier + tombstones
+over a frozen base, folded back into the disk artifact on compaction).
 
 ``repro.core.persist.load_index`` reopens a saved directory as whichever
 implementation wrote it.
@@ -51,3 +59,23 @@ class VectorIndex(Protocol):
 
     @classmethod
     def load(cls, directory: str) -> "VectorIndex": ...
+
+
+@runtime_checkable
+class MutableVectorIndex(VectorIndex, Protocol):
+    """A ``VectorIndex`` that accepts writes between searches.
+
+    ``insert`` returns the external ids assigned to the new vectors (caller
+    ids echoed back, or freshly allocated when omitted); ``delete`` returns
+    how many ids were live; ``compact`` folds pending writes into a fresh
+    base artifact and returns whether anything was folded. Writes must
+    interleave safely with concurrent ``search`` calls.
+    """
+
+    def insert(
+        self, vectors: np.ndarray, ids: np.ndarray | None = None
+    ) -> np.ndarray: ...
+
+    def delete(self, ids: np.ndarray) -> int: ...
+
+    def compact(self) -> bool: ...

@@ -480,6 +480,33 @@ def batch_search(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk_streams(
+    ids_a: jnp.ndarray,
+    d_a: jnp.ndarray,
+    ids_b: jnp.ndarray,
+    d_b: jnp.ndarray,
+    *,
+    k: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge two per-query top-k result streams into one (Q, k) top-k.
+
+    The fresh+disk unification point of the mutable index
+    (``repro.core.delta``): stream *a* is the persisted page-file search
+    (tombstones already masked to PAD/INF), stream *b* the in-memory delta
+    scan. Both are (Q, ka) / (Q, kb) ascending-by-distance with PAD ids
+    carrying INF distances; the merge is one batched ``lax.top_k`` over the
+    concatenation — same selection rule as the hot loop's ``merge`` — and
+    re-masks non-finite winners to PAD so padding never leaks as a result.
+    Returns (ids (Q, k) int32, dists (Q, k) f32).
+    """
+    d = jnp.concatenate([d_a, d_b], axis=1)
+    ids = jnp.concatenate([ids_a, ids_b], axis=1).astype(jnp.int32)
+    neg, idx = jax.lax.top_k(-d, k)
+    merged = jnp.take_along_axis(ids, idx, axis=1)
+    return jnp.where(jnp.isfinite(neg), merged, PAD), -neg
+
+
 # --------------------------------------------------------------------------
 # mesh-sharded entry point: shard the query batch, replicate the index
 # --------------------------------------------------------------------------

@@ -64,6 +64,24 @@ def page_gather_l2(pages, page_ids, q, *, impl: str | None = None,
     return ref.page_gather_l2_ref(pages, page_ids, q)
 
 
+def delta_scan(q, vecs, live, k: int, *, impl: str | None = None,
+               interpret: bool = False):
+    """Brute-force scan of the mutable index's in-memory delta tier.
+
+    q: (Q, d) f32 queries, vecs: (C, d) f32 delta buffer (C a power of
+    two), live: (C,) bool row-validity mask. Routes the distance matrix
+    through the batched L2 kernel path (``l2dist`` on TPU, jnp oracle
+    elsewhere), masks dead/padded rows to INF, and selects the per-query
+    ascending top-k with ``lax.top_k``. Returns (dists (Q, k) f32,
+    slots (Q, k) int32 row indices into ``vecs``); non-finite entries mean
+    fewer than k live rows.
+    """
+    d = l2_distance(q, vecs, impl=impl, interpret=interpret)
+    d = jnp.where(live[None, :], d, jnp.inf)
+    neg, slots = jax.lax.top_k(-d, k)
+    return -neg, slots.astype(jnp.int32)
+
+
 def page_scan(recs, page_ids, q, lut, *, capacity: int, dim: int, rp: int,
               compute_adc: bool = True, impl: str | None = None,
               interpret: bool = False):

@@ -2,14 +2,22 @@
 augmented through a PERSISTED vector index (the paper's system as a
 first-class serving feature — see examples/serve_rag.py for the full RAG
 loop). ``--index-dir`` loads a saved index (``PageANNIndex.save`` /
-``DiskANNIndex.save`` / ``StarlingIndex.save`` artifact — whichever kind
-the manifest names) through the ``VectorIndex`` lifecycle and retrieves
-neighbor ids for every prompt embedding before decoding: the build-once /
-serve-many workflow, no index rebuild in the serving process.
+``DiskANNIndex.save`` / ``StarlingIndex.save`` / ``MutableIndex.save``
+artifact — whichever kind the manifest names) through the ``VectorIndex``
+lifecycle and retrieves neighbor ids for every prompt embedding before
+decoding: the build-once / serve-many workflow, no index rebuild in the
+serving process.
+
+``--mutable`` wraps the loaded index in a ``core.delta.MutableIndex`` (a
+loaded mutable artifact is already one) and exercises the write path
+end to end: the prompt embeddings are INSERTED as fresh documents through
+``engine.insert``, retrieved back (each prompt now finds itself), then
+DELETED again — the serving process takes writes without an index rebuild.
 
 Usage (CPU smoke; --arch defaults to granite-3-2b):
   PYTHONPATH=src python -m repro.launch.serve --smoke \
-      --batch 4 --prompt-len 32 --gen 16 [--index-dir idx.pageann]
+      --batch 4 --prompt-len 32 --gen 16 [--index-dir idx.pageann] \
+      [--mutable]
 """
 from __future__ import annotations
 
@@ -55,6 +63,11 @@ def main(argv=None):
              "prompt embedding through the loaded index before decoding",
     )
     ap.add_argument("--retrieve-k", type=int, default=3)
+    ap.add_argument(
+        "--mutable", action="store_true",
+        help="serve the index through the mutable delta tier and exercise "
+             "engine.insert / engine.delete with the prompt embeddings",
+    )
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
@@ -66,10 +79,12 @@ def main(argv=None):
     )
 
     if args.index_dir:
-        from repro.core import load_index
+        from repro.core import MutableIndex, load_index
         from repro.serve import BatchingEngine
 
         index = load_index(args.index_dir)
+        if args.mutable and not isinstance(index, MutableIndex):
+            index = MutableIndex(index)
         emb = np.asarray(
             state.params["embed"][prompts].mean(axis=1), np.float32
         )
@@ -81,10 +96,22 @@ def main(argv=None):
             index, k=args.retrieve_k, batch_size=args.batch
         )
         rows = engine.search(emb)
-        engine.close()
         ids = np.stack([r.result.ids for r in rows])
         print(f"loaded {type(index).__name__} from {args.index_dir}; "
               f"retrieved ids per prompt:\n{ids}")
+        if args.mutable:
+            # write path: insert the prompts as fresh documents, retrieve
+            # them back (exact match -> each prompt finds itself), drop them
+            new_ids = engine.insert(emb)
+            rows = engine.search(emb, k=1)
+            found = np.stack([r.result.ids for r in rows])[:, 0]
+            removed = engine.delete(new_ids)
+            m = engine.metrics()
+            print(f"mutable: inserted {m.inserts} docs -> ids {new_ids}; "
+                  f"self-retrieval {found}; deleted {removed}")
+            if not np.array_equal(np.sort(found), np.sort(new_ids)):
+                raise SystemExit("inserted prompts did not retrieve themselves")
+        engine.close()
 
     t0 = time.perf_counter()
     out = generate(state.params, arch, prompts, args.gen)

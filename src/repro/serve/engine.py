@@ -65,6 +65,9 @@ class EngineMetrics(NamedTuple):
     mean_ios: float            # mean disk page reads per request
     mean_batch_occupancy: float  # real requests per dispatched batch
     padded_fraction: float     # pad rows / dispatched rows
+    inserts: int = 0           # vectors written through engine.insert
+    deletes: int = 0           # ids removed through engine.delete
+    compactions: int = 0       # compact() calls that folded the delta
 
 
 class _Pending(NamedTuple):
@@ -88,6 +91,9 @@ class BatchingEngine:
         latency_window: int = 8192,
         dtype=np.float32,
         clock: Callable[[], float] = time.perf_counter,
+        insert_fn: Callable[[np.ndarray, Any], np.ndarray] | None = None,
+        delete_fn: Callable[[Any], int] | None = None,
+        compact_fn: Callable[[], bool] | None = None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -118,6 +124,12 @@ class BatchingEngine:
         self._latencies_ms: collections.deque = collections.deque(
             maxlen=latency_window
         )
+        self._insert_fn = insert_fn
+        self._delete_fn = delete_fn
+        self._compact_fn = compact_fn
+        self._inserts = 0
+        self._deletes = 0
+        self._compactions = 0
         self._completed = 0
         self._total_ios = 0.0
         self._batches = 0
@@ -203,6 +215,51 @@ class BatchingEngine:
         ]
         self.flush()
         return [f.result() for f in futs]
+
+    # --------------------------------------------------------------- writes
+    # Write requests run inline against the mutable backend; the backend
+    # (``core.delta.MutableIndex``) publishes each mutation as ONE atomic
+    # state swap, so in-flight search dispatches — which snapshot that
+    # state lock-free at backend-call time — interleave safely: a search
+    # sees either the pre- or post-write index, never a half-applied one.
+
+    def insert(self, vectors: np.ndarray, ids=None) -> np.ndarray:
+        """Insert vectors into the mutable backend; returns their external
+        ids. Raises if the engine wraps an immutable index."""
+        if self._insert_fn is None:
+            raise RuntimeError("engine backend does not support insert")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+        vectors = np.asarray(vectors, self._dtype).reshape(-1, self._dim)
+        out = self._insert_fn(vectors, ids)
+        with self._lock:
+            self._inserts += vectors.shape[0]
+        return out
+
+    def delete(self, ids) -> int:
+        """Delete ids from the mutable backend; returns how many were live."""
+        if self._delete_fn is None:
+            raise RuntimeError("engine backend does not support delete")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+        removed = self._delete_fn(ids)
+        with self._lock:
+            self._deletes += removed
+        return removed
+
+    def compact(self) -> bool:
+        """Fold the backend's delta tier into a fresh base artifact.
+        Pending searches keep completing against the pre-compaction
+        snapshot while the rebuild runs."""
+        if self._compact_fn is None:
+            raise RuntimeError("engine backend does not support compact")
+        did = self._compact_fn()
+        if did:
+            with self._lock:
+                self._compactions += 1
+        return did
 
     def close(self) -> None:
         self.flush()
@@ -373,6 +430,9 @@ class BatchingEngine:
                     if self._dispatched_rows
                     else 0.0
                 ),
+                inserts=self._inserts,
+                deletes=self._deletes,
+                compactions=self._compactions,
             )
 
     # ------------------------------------------------------------- builders
@@ -393,9 +453,12 @@ class BatchingEngine:
         ORIGINAL vector ids.
 
         The backend is the protocol's ``index.search(queries, k, params)``
-        — PageANN, DiskANN, or Starling alike. For a ``PageANNIndex``,
-        passing a mesh (see ``launch.mesh``) dispatches ``shard_search``
-        with the query batch split across it.
+        — PageANN, DiskANN, Starling, or a ``MutableIndex`` alike. When the
+        index speaks the ``MutableVectorIndex`` writes
+        (insert/delete/compact), the engine exposes them as request types
+        that interleave safely with in-flight searches. For a
+        ``PageANNIndex``, passing a mesh (see ``launch.mesh``) dispatches
+        ``shard_search`` with the query batch split across it.
         """
         def fn(queries: np.ndarray, k_bin: int, p: SearchParams | None):
             if mesh is not None:
@@ -410,5 +473,8 @@ class BatchingEngine:
             default_k=k,
             default_params=params,
             k_bins=k_bins,
+            insert_fn=getattr(index, "insert", None),
+            delete_fn=getattr(index, "delete", None),
+            compact_fn=getattr(index, "compact", None),
             **kwargs,
         )

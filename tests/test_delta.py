@@ -1,0 +1,402 @@
+"""Mutable index: delta tier, tombstones, unified fresh+disk search,
+compaction equivalence, dirty persistence, and engine write interleaving."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeltaParams,
+    MemoryMode,
+    MutableIndex,
+    MutableVectorIndex,
+    PageANNConfig,
+    PageANNIndex,
+    SearchParams,
+    load_index,
+    recall_at_k,
+)
+from repro.core.delta import DeltaTier, scan_delta
+from repro.core.search import merge_topk_streams
+from repro.core.vamana import brute_force_knn
+from repro.data.pipeline import clustered_vectors, query_vectors
+from repro.serve import BatchingEngine
+
+N, D, Q = 1000, 32, 10
+N_BASE = 800
+
+PAD = -1
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    x = clustered_vectors(N, D, num_clusters=16, seed=0)
+    q = query_vectors(x, Q, seed=1)
+    return x, q
+
+
+def _cfg(**kw):
+    base = dict(
+        dim=D, graph_degree=12, build_beam=24, pq_subspaces=8,
+        lsh_sample=256, lsh_entries=8, beam_width=48, max_hops=48,
+        memory_mode=MemoryMode.HYBRID,
+    )
+    base.update(kw)
+    return PageANNConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def base_index(dataset):
+    x, _ = dataset
+    return PageANNIndex.build(x[:N_BASE], _cfg())
+
+
+def _mutable(base_index, **kw):
+    kw.setdefault("auto_compact", False)
+    return MutableIndex(base_index, **kw)
+
+
+# -------------------------------------------------------------- delta tier
+def test_delta_tier_scan_matches_brute_force():
+    rng = np.random.default_rng(0)
+    tier = DeltaTier(D, capacity=8)
+    vecs = rng.standard_normal((37, D)).astype(np.float32)
+    ids = np.arange(100, 137)
+    tier.insert(vecs, ids)                     # forces a buffer grow
+    q = rng.standard_normal((5, D)).astype(np.float32)
+
+    got_ids, got_d = scan_delta(tier.snapshot(), q, 7)
+    d2 = ((q[:, None, :] - vecs[None]) ** 2).sum(-1)
+    want = np.argsort(d2, axis=1)[:, :7]
+    np.testing.assert_array_equal(got_ids, ids[want])
+    np.testing.assert_allclose(
+        got_d, np.take_along_axis(d2, want, axis=1), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_delta_tier_upsert_and_kill_semantics():
+    tier = DeltaTier(D)
+    v = np.eye(D, dtype=np.float32)[:3]
+    tier.insert(v, [5, 6, 7])
+    assert tier.live_count == 3
+    tier.insert(2 * v[:1], [5])                # upsert: old row 5 dies
+    assert tier.live_count == 3
+    ids, d = scan_delta(tier.snapshot(), 2 * v[:1], 1)
+    assert ids[0, 0] == 5 and d[0, 0] == 0.0
+    assert tier.kill([6, 99]) == 1             # unknown ids ignored
+    assert tier.live_count == 2
+    ids, _ = scan_delta(tier.snapshot(), v[1:2], 3)
+    assert 6 not in ids
+    with pytest.raises(ValueError, match="duplicate"):
+        tier.insert(v[:2], [8, 8])
+
+
+def test_snapshot_is_isolated_from_later_writes():
+    tier = DeltaTier(D)
+    rng = np.random.default_rng(1)
+    v1 = rng.standard_normal((4, D)).astype(np.float32)
+    tier.insert(v1, np.arange(4))
+    snap = tier.snapshot()
+    tier.insert(rng.standard_normal((30, D)).astype(np.float32),
+                np.arange(100, 130))
+    tier.kill([0, 1, 2, 3])
+    q = v1[:1]
+    ids, d = scan_delta(snap, q, 4)            # old snapshot: old contents
+    assert set(ids[0].tolist()) == {0, 1, 2, 3}
+    assert d[0, 0] == 0.0
+
+
+def test_merge_topk_streams_interleaves_and_masks_pad():
+    ids_a = np.array([[0, 1, PAD]], np.int32)
+    d_a = np.array([[0.1, 0.5, np.inf]], np.float32)
+    ids_b = np.array([[10, 11]], np.int32)
+    d_b = np.array([[0.2, np.inf]], np.float32)
+    ids, d = merge_topk_streams(ids_a, d_a, ids_b, d_b, k=4)
+    np.testing.assert_array_equal(np.asarray(ids), [[0, 10, 1, PAD]])
+    assert not np.isfinite(np.asarray(d)[0, 3])
+
+
+# ---------------------------------------------------------- unified search
+def test_pure_read_path_is_bitwise_base(dataset, base_index):
+    """No writes yet: the wrapper returns the base result object untouched
+    — zero overhead and exact parity on the read-only path."""
+    _, q = dataset
+    m = _mutable(base_index)
+    want = base_index.search(q, k=10)
+    got = m.search(q, k=10)
+    for f in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(want, f)), np.asarray(getattr(got, f)),
+            err_msg=f,
+        )
+
+
+def test_mutable_recall_matches_static_over_merged_set(dataset, base_index):
+    """Acceptance bar: search over (base ∪ inserts − deletes) reaches at
+    least the recall a static build achieves on the same data."""
+    x, q = dataset
+    m = _mutable(base_index)
+    m.insert(x[N_BASE:], ids=np.arange(N_BASE, N))
+    deleted = np.arange(0, 40)
+    m.delete(deleted)
+
+    live = np.ones(N, bool)
+    live[deleted] = False
+    live_rows = np.nonzero(live)[0]
+    truth = live_rows[brute_force_knn(x[live_rows], q, 10)]
+
+    static = PageANNIndex.build(x[live_rows], _cfg())
+    static_ids = live_rows[
+        np.maximum(np.asarray(static.search(q, k=10).ids), 0)
+    ]
+    r_static = recall_at_k(static_ids, truth)
+
+    res = m.search(q, k=10)
+    r_mut = recall_at_k(np.asarray(res.ids), truth)
+    assert r_mut >= r_static - 1e-9, (r_mut, r_static)
+    # tombstoned and never-inserted ids are absent
+    assert not np.isin(np.asarray(res.ids), deleted).any()
+    # delta hits cost no page reads: ios bounded by a pure base search
+    base_only = base_index.search(q, k=10)
+    assert np.asarray(res.ios).mean() <= np.asarray(base_only.ios).mean() * 2
+
+
+def test_delete_heavy_results_stay_full_and_live(dataset, base_index):
+    _, q = dataset
+    m = _mutable(base_index)
+    deleted = np.arange(0, 120)                 # > one oversample bucket
+    assert m.delete(deleted) == 120
+    assert m.delete(deleted) == 0               # idempotent
+    res = m.search(q, k=10)
+    ids = np.asarray(res.ids)
+    assert (ids >= 0).all()                     # never fewer than k live
+    assert not np.isin(ids, deleted).any()
+    assert np.isfinite(np.asarray(res.dists)).all()
+
+
+def test_upsert_moves_vector(dataset, base_index):
+    x, _ = dataset
+    m = _mutable(base_index)
+    far = np.full((1, D), 37.0, np.float32)
+    m.insert(far, ids=np.array([123]))
+    hit = m.search(far, k=1)
+    assert np.asarray(hit.ids)[0, 0] == 123
+    # the id's old location no longer resolves to it
+    old = m.search(x[123][None], k=5)
+    row = np.asarray(old.ids)[0]
+    assert 123 not in row
+
+
+def test_search_params_and_k_resolution(dataset, base_index):
+    x, q = dataset
+    m = _mutable(base_index)
+    m.insert(x[N_BASE:])
+    p = SearchParams(k=7, beam_width=32, lsh_entries=8, max_hops=48)
+    res = m.search(q, params=p)
+    assert np.asarray(res.ids).shape == (Q, 7)
+    res5 = m.search(q, k=5, params=p)
+    assert np.asarray(res5.ids).shape == (Q, 5)
+
+
+def test_mutable_implements_protocols(base_index):
+    m = _mutable(base_index)
+    assert isinstance(m, MutableVectorIndex)
+    assert m.dim == D
+
+
+# -------------------------------------------------------------- compaction
+def test_compact_equivalent_to_fresh_build(dataset, base_index):
+    """After compact(), results are EQUIVALENT to a cold
+    ``PageANNIndex.build`` over the merged dataset — same pipeline, same
+    config, same row order, bit-identical outputs."""
+    x, q = dataset
+    m = _mutable(base_index)
+    m.insert(x[N_BASE:], ids=np.arange(N_BASE, N))
+    deleted = np.arange(10, 60)
+    m.delete(deleted)
+    assert m.compact()
+    assert m.generation == 1
+    assert not m.compact()                      # nothing left to fold
+    assert m.stats.tombstones == 0 and m.stats.delta_live == 0
+
+    live = np.ones(N, bool)
+    live[deleted] = False
+    live_rows = np.nonzero(live)[0]
+    fresh = PageANNIndex.build(x[live_rows], _cfg())
+
+    got = m.search(q, k=10)
+    want = fresh.search(q, k=10)
+    want_ext = np.where(
+        np.asarray(want.ids) >= 0,
+        live_rows[np.maximum(np.asarray(want.ids), 0)],
+        PAD,
+    )
+    np.testing.assert_array_equal(np.asarray(got.ids), want_ext)
+    for f in ("dists", "ios", "hops", "cache_hits"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+            err_msg=f,
+        )
+
+
+def test_auto_compact_triggers_on_fraction(dataset, base_index):
+    x, _ = dataset
+    m = MutableIndex(
+        base_index,
+        params=DeltaParams(compact_fraction=0.1),
+        auto_compact=True,
+    )
+    m.insert(x[N_BASE:N_BASE + 40])             # 40/800 = 5%: below
+    assert m.generation == 0
+    m.insert(x[N_BASE + 40:N_BASE + 120])       # 120/800 = 15%: fires
+    assert m.generation == 1
+    assert m.stats.delta_live == 0
+    assert m.stats.base_rows == N_BASE + 120
+
+
+# -------------------------------------------------------------- lifecycle
+def test_dirty_save_load_bit_identical(tmp_path, dataset, base_index):
+    """Acceptance bar: a dirty (uncompacted) index round-trips through
+    save/load to bit-identical search results — a restarted server loses
+    no inserts and no tombstones."""
+    x, q = dataset
+    m = _mutable(base_index)
+    m.insert(x[N_BASE:N_BASE + 150], ids=np.arange(N_BASE, N_BASE + 150))
+    m.delete(np.arange(0, 25))
+    m.insert(x[N_BASE + 150:], ids=np.arange(N_BASE + 150, N))
+    m.delete([N_BASE + 3, N_BASE + 170])        # delta rows die too
+
+    art = str(tmp_path / "idx.mutable")
+    m.save(art)
+    loaded = load_index(art)
+    assert type(loaded) is MutableIndex
+    assert loaded.generation == 0
+    assert loaded.stats.tombstones == m.stats.tombstones
+    assert loaded.stats.delta_live == m.stats.delta_live
+
+    want = m.search(q, k=10)
+    got = loaded.search(q, k=10)
+    for f in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(want, f)), np.asarray(getattr(got, f)),
+            err_msg=f,
+        )
+    # and the reloaded index keeps taking writes
+    loaded.insert(np.full((1, D), 9.0, np.float32))
+
+
+def test_compact_swaps_persisted_artifact_atomically(
+    tmp_path, dataset, base_index
+):
+    x, q = dataset
+    m = _mutable(base_index)
+    m.insert(x[N_BASE:N_BASE + 100], ids=np.arange(N_BASE, N_BASE + 100))
+    art = str(tmp_path / "idx.mutable")
+    m.save(art)
+
+    with open(os.path.join(art, "manifest.json")) as f:
+        assert json.load(f)["generation"] == 0
+    assert m.compact()
+    # manifest generation counter advanced on disk, atomically
+    with open(os.path.join(art, "manifest.json")) as f:
+        doc = json.load(f)
+    assert doc["generation"] == 1
+    assert doc["delta_rows"] == 0 and doc["tombstones"] == 0
+    # no half-swapped leftovers
+    leftovers = [
+        p for p in os.listdir(tmp_path) if ".tmp" in p or ".old" in p
+    ]
+    assert leftovers == []
+
+    reloaded = load_index(art)
+    want = m.search(q, k=10)
+    got = reloaded.search(q, k=10)
+    for f in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(want, f)), np.asarray(getattr(got, f)),
+            err_msg=f,
+        )
+
+
+# ------------------------------------------------------------- engine I/O
+def test_engine_insert_delete_requests(dataset, base_index):
+    x, q = dataset
+    m = _mutable(base_index)
+    eng = BatchingEngine.from_index(m, k=5, batch_size=4)
+    ids = eng.insert(x[N_BASE:N_BASE + 20])
+    assert ids.shape == (20,)
+    rows = eng.search(x[N_BASE:N_BASE + 4], k=1)
+    found = np.array([r.result.ids[0] for r in rows])
+    np.testing.assert_array_equal(found, ids[:4])
+    assert eng.delete(ids[:4]) == 4
+    rows = eng.search(x[N_BASE:N_BASE + 4], k=1)
+    assert not np.isin(
+        np.array([r.result.ids[0] for r in rows]), ids[:4]
+    ).any()
+    assert eng.compact()
+    metrics = eng.metrics()
+    assert metrics.inserts == 20
+    assert metrics.deletes == 4
+    assert metrics.compactions == 1
+    eng.close()
+
+
+def test_engine_rejects_writes_on_immutable_backend(base_index):
+    eng = BatchingEngine.from_index(base_index, k=5, batch_size=4)
+    with pytest.raises(RuntimeError, match="insert"):
+        eng.insert(np.zeros((1, D), np.float32))
+    with pytest.raises(RuntimeError, match="delete"):
+        eng.delete([0])
+    eng.close()
+
+
+def test_searches_across_compaction_all_complete(dataset, base_index):
+    """Satellite acceptance: searches issued concurrently with compact()
+    must all complete and never observe a half-swapped artifact — every
+    result is a fully consistent top-k from either the old or new state."""
+    x, q = dataset
+    m = _mutable(base_index)
+    m.insert(x[N_BASE:], ids=np.arange(N_BASE, N))
+    eng = BatchingEngine.from_index(m, k=5, batch_size=2, timeout_ms=5.0)
+
+    errors = []
+    results = []
+    stop = threading.Event()
+
+    def searcher(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            row = x[rng.integers(0, N)]
+            try:
+                r = eng.submit(row).result(timeout=60)
+                results.append(np.asarray(r.result.ids))
+            except Exception as e:      # noqa: BLE001 — collected for assert
+                errors.append(e)
+
+    threads = [threading.Thread(target=searcher, args=(s,)) for s in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for gen in (1, 2):
+            m.insert(
+                np.full((2, D), 50.0 + gen, np.float32),
+                ids=np.array([5000 + 2 * gen, 5001 + 2 * gen]),
+            )
+            assert m.compact()
+            assert m.generation == gen
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+        eng.close()
+
+    assert not errors, errors
+    assert len(results) > 0
+    universe = set(range(N)) | {5002, 5003, 5004, 5005}
+    for ids in results:
+        finite = ids[ids >= 0]
+        # ids from a torn state would fall outside every generation's set
+        assert set(finite.tolist()) <= universe
+        assert len(set(finite.tolist())) == len(finite)   # no dup rows

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    IndexFormatError,
     MemoryMode,
     PageANNConfig,
     PageANNIndex,
@@ -132,6 +133,100 @@ def test_manifest_version_guard(tmp_path, pageann_hybrid):
         json.dump(doc, f)
     with pytest.raises(ValueError, match="version"):
         PageANNIndex.load(art)
+
+
+def test_version_ahead_names_found_vs_supported(tmp_path, pageann_hybrid):
+    """A manifest written by a NEWER library raises IndexFormatError that
+    states both versions and says to upgrade — not a cryptic KeyError."""
+    art = str(tmp_path / "idx.pageann")
+    pageann_hybrid.save(art)
+    path = os.path.join(art, "manifest.json")
+    with open(path) as f:
+        doc = json.load(f)
+    doc["version"] = persist.VERSION + 7
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(
+        IndexFormatError,
+        match=rf"found format version {persist.VERSION + 7}.*"
+              rf"supports version {persist.VERSION}.*upgrade",
+    ):
+        load_index(art)
+
+
+def test_truncated_pages_bin_raises_index_format_error(
+    tmp_path, pageann_hybrid
+):
+    """A corrupted/truncated page file fails with a clear IndexFormatError
+    naming the byte mismatch — not a numpy memmap/reshape error."""
+    art = str(tmp_path / "idx.pageann")
+    pageann_hybrid.save(art)
+    path = os.path.join(art, "pages.bin")
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) - 4096)
+    with pytest.raises(IndexFormatError, match="truncated"):
+        PageANNIndex.load(art)
+    os.remove(path)
+    with pytest.raises(IndexFormatError, match="missing page file"):
+        load_index(art)
+
+
+def test_garbled_manifest_raises_index_format_error(tmp_path, pageann_hybrid):
+    art = str(tmp_path / "idx.pageann")
+    pageann_hybrid.save(art)
+    with open(os.path.join(art, "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(IndexFormatError, match="JSON"):
+        load_index(art)
+
+
+def test_stats_disk_bytes_reports_persisted_artifact(tmp_path, pageann_hybrid):
+    """stats on a loaded (memmap) index reports the artifact's actual
+    on-disk size; a built index projects the same number from its page
+    geometry — the two agree because save writes the records verbatim."""
+    idx = pageann_hybrid
+    art = str(tmp_path / "idx.pageann")
+    idx.save(art)
+    loaded = PageANNIndex.load(art)
+    on_disk = os.path.getsize(os.path.join(art, "pages.bin"))
+    assert loaded.stats.disk_bytes == on_disk
+    assert idx.stats.disk_bytes == on_disk
+    assert (
+        loaded.stats.disk_bytes
+        == loaded.store.num_pages * loaded.store.padded_tile_bytes()
+    )
+
+
+def test_warm_cache_persists_across_save_load(tmp_path, dataset):
+    """Warm-cache persistence (ROADMAP): hot page ids ride the manifest on
+    save and pre-populate cached_pages on load — a restarted server's
+    ios/cache_hits match the warmed builder exactly."""
+    x, q, _ = dataset
+    idx = PageANNIndex.build(x, _cfg(cache_pages=16), warmup_queries=q)
+    assert np.asarray(idx.tier.cached_pages).size > 0
+
+    art = str(tmp_path / "idx.warm")
+    idx.save(art)
+    with open(os.path.join(art, "manifest.json")) as f:
+        doc = json.load(f)
+    np.testing.assert_array_equal(
+        np.asarray(doc["hot_pages"], np.int32),
+        np.asarray(idx.tier.cached_pages),
+    )
+
+    loaded = PageANNIndex.load(art)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.tier.cached_pages), np.asarray(idx.tier.cached_pages)
+    )
+    warm = idx.search(q, k=10)
+    reloaded = loaded.search(q, k=10)
+    np.testing.assert_array_equal(
+        np.asarray(reloaded.ios), np.asarray(warm.ios)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(reloaded.cache_hits), np.asarray(warm.cache_hits)
+    )
+    assert np.asarray(reloaded.cache_hits).sum() > 0   # actually warm
 
 
 # ---------------------------------------------------------- SearchParams

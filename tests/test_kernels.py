@@ -145,6 +145,28 @@ def test_ops_dispatch_to_ref_on_cpu():
     )
 
 
+def test_delta_scan_kernel_path_parity_and_masking():
+    """ops.delta_scan (the mutable index's fresh-tier scan) agrees between
+    the pallas l2 kernel path (interpret) and the jnp oracle path, and
+    never returns a dead row while a live one remains."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((3, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    live = jnp.asarray(rng.random(64) > 0.4)
+    d_ref, s_ref = ops.delta_scan(q, v, live, 6, impl="ref")
+    d_pal, s_pal = ops.delta_scan(q, v, live, 6, impl="pallas", interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(d_ref), np.asarray(d_pal), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_pal))
+    live_np = np.asarray(live)
+    finite = np.isfinite(np.asarray(d_ref))
+    assert finite.sum(1).min() == min(6, live_np.sum())
+    assert live_np[np.asarray(s_ref)[finite]].all()
+
+
 # -------------------------------------------------- hypothesis properties
 if HAVE_HYPOTHESIS:
 
