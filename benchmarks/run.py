@@ -21,10 +21,11 @@ def main() -> None:
         serve_throughput,
     )
 
-    # benchmarks.search_hotpath and benchmarks.churn are NOT registered
-    # here: CI runs each as its own gated step (--check BENCH_serve.json /
-    # --smoke) right after this harness, and registering them too would pay
-    # for their sweeps twice.
+    # benchmarks.search_hotpath, benchmarks.churn, and
+    # benchmarks.serve_database are NOT registered here: CI runs each as
+    # its own gated step (--check BENCH_serve.json / --smoke) right after
+    # this harness, and registering them too would pay for their sweeps
+    # twice.
     modules = [
         ("table1_read_amplification", read_amplification),
         ("fig7_8_table3_recall_io", recall_io),

@@ -28,19 +28,16 @@ K = 10
 def _drive(index, queries: np.ndarray, batch_size: int) -> dict:
     """Stream every query through a fresh engine; return the sweep point."""
     # warm the jit cache so compile time doesn't pollute the latency stats
-    warm = BatchingEngine.from_index(index, k=K, batch_size=batch_size)
-    warm.search(queries[:batch_size])
-    warm.close()
+    with BatchingEngine.from_index(index, k=K, batch_size=batch_size) as warm:
+        warm.search(queries[:batch_size])
 
-    engine = BatchingEngine.from_index(index, k=K, batch_size=batch_size)
-    t0 = time.perf_counter()
-    futures = [engine.submit(q) for q in queries]
-    engine.flush()
-    rows = [f.result() for f in futures]
-    wall = time.perf_counter() - t0
-    engine.close()
-
-    m = engine.metrics()
+    with BatchingEngine.from_index(index, k=K, batch_size=batch_size) as engine:
+        t0 = time.perf_counter()
+        futures = [engine.submit(q) for q in queries]
+        engine.flush()
+        rows = [f.result() for f in futures]
+        wall = time.perf_counter() - t0
+        m = engine.metrics()
     ids = np.stack([r.result.ids for r in rows])
     return dict(
         batch_size=batch_size,

@@ -1,9 +1,13 @@
 """Retrieval-augmented serving: PageANN as a first-class serving feature.
 
-A small LM embeds each request (mean-pooled hidden state), the PageANN
-index retrieves the nearest passages' ids, and the retrieved context tokens
-are prepended before greedy decoding — the kNN-augmented serving loop the
-paper's index accelerates.
+A small LM embeds each request (mean-pooled hidden state), a
+multi-collection :class:`repro.serve.VectorService` retrieves the nearest
+passages' ids from the collection the request names, and the retrieved
+context tokens are prepended before greedy decoding — the kNN-augmented
+serving loop the paper's index accelerates, served database-style: a
+"passages" corpus and a "notes" corpus live behind ONE service (one
+batching core, one compile cache), and each request routes by collection
+name.
 
   PYTHONPATH=src python examples/serve_rag.py
 """
@@ -12,10 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.core import MemoryMode, PageANNConfig, PageANNIndex, SearchParams
+from repro.core import MemoryMode, PageANNConfig, SearchParams
 from repro.launch.serve import generate
 from repro.models import transformer as tf
-from repro.serve import BatchingEngine
+from repro.serve import VectorService
 from repro.train.step import init_train_state
 
 
@@ -38,47 +42,67 @@ def main():
     arch = get_arch("granite-3-2b", smoke=True)
     state = init_train_state(arch, jax.random.PRNGKey(0))
 
-    # corpus: 2000 synthetic passages; the index key is the passage's
-    # mean token embedding (same space as query embeddings)
+    # two corpora: 2000 synthetic passages plus a smaller "notes" corpus —
+    # the index key is each document's mean token embedding (same space as
+    # query embeddings)
     rng = np.random.default_rng(0)
-    corpus_tokens = rng.integers(0, arch.vocab_size, (2000, 16), np.int32)
-    corpus_emb = np.asarray(
-        embed(state.params, arch, jnp.asarray(corpus_tokens)), np.float32
-    )
+    corpora = {}
+    for name, rows in (("passages", 2000), ("notes", 600)):
+        tokens = rng.integers(0, arch.vocab_size, (rows, 16), np.int32)
+        corpora[name] = (
+            tokens,
+            np.asarray(embed(state.params, arch, jnp.asarray(tokens)),
+                       np.float32),
+        )
 
+    dim = corpora["passages"][1].shape[1]
     cfg = PageANNConfig(
-        dim=corpus_emb.shape[1], graph_degree=16, build_beam=32,
+        dim=dim, graph_degree=16, build_beam=32,
         pq_subspaces=8, lsh_sample=512, lsh_entries=8,
         beam_width=48, memory_mode=MemoryMode.HYBRID,
     )
-    print("building PageANN index over corpus embeddings …")
-    index = PageANNIndex.build(corpus_emb, cfg)
 
-    # requests arrive one at a time; the batching engine collects them into
-    # one fixed-shape dispatch and demuxes results per request. Requests
-    # may carry their own runtime knobs: the last one asks for a wider
-    # beam, forming its own (k-bin, params) dispatch group.
-    engine = BatchingEngine.from_index(index, k=3, batch_size=4)
-    requests = jnp.asarray(rng.integers(0, arch.vocab_size, (4, 8), np.int32))
-    q_emb = np.asarray(embed(state.params, arch, requests), np.float32)
-    wide = SearchParams(k=3, beam_width=64, lsh_entries=12)
-    futures = [
-        engine.submit(q, params=wide if i == len(q_emb) - 1 else None)
-        for i, q in enumerate(q_emb)
-    ]
-    engine.flush()
-    rows = [f.result() for f in futures]
-    ids = np.stack([r.result.ids for r in rows])
-    ios = np.stack([r.result.ios for r in rows])
-    print(f"retrieved ids per request:\n{ids}")
-    print(f"mean page reads/request: {ios.mean():.1f}")
-    m = engine.metrics()
-    print(f"engine: {m.requests} requests in {m.batches} batch(es), "
-          f"p50 latency {m.latency_ms_p50:.1f} ms")
+    # requests arrive one at a time, each naming its collection; the one
+    # shared service collects them into per-(collection, k-bin, params)
+    # fixed-shape dispatches and demuxes results per request. The last
+    # request also carries its own runtime knobs (a wider beam), forming
+    # its own dispatch group.
+    with VectorService(batch_size=4) as svc:
+        for name, (_, emb_rows) in corpora.items():
+            print(f"building PageANN collection {name!r} "
+                  f"({len(emb_rows)} docs) …")
+            svc.create_collection(name, cfg, emb_rows, k=3)
 
-    # prepend the top passage to each request and decode
+        requests = jnp.asarray(
+            rng.integers(0, arch.vocab_size, (4, 8), np.int32)
+        )
+        q_emb = np.asarray(embed(state.params, arch, requests), np.float32)
+        # route: even requests search the passages, odd ones the notes
+        route = ["passages", "notes", "passages", "notes"]
+        wide = SearchParams(k=3, beam_width=64, lsh_entries=12)
+        futures = [
+            svc.submit(route[i], q,
+                       params=wide if i == len(q_emb) - 1 else None)
+            for i, q in enumerate(q_emb)
+        ]
+        svc.flush()
+        rows = [f.result() for f in futures]
+        ids = np.stack([r.result.ids for r in rows])
+        ios = np.stack([r.result.ios for r in rows])
+        for i, (coll, r) in enumerate(zip(route, rows)):
+            print(f"request {i} -> :{coll} -> ids {np.asarray(r.result.ids)}")
+        print(f"mean page reads/request: {ios.mean():.1f}")
+        m = svc.metrics()
+        print(f"service: {m.requests} requests over {m.collections} "
+              f"collections in {m.batches} batch(es), "
+              f"p50 latency {m.latency_ms_p50:.1f} ms, compile cache "
+              f"{m.compile_hits} hits / {m.compile_misses} misses")
+
+    # prepend each request's top document (from ITS collection) and decode
     top = np.where(ids[:, 0] >= 0, ids[:, 0], 0)
-    context = jnp.asarray(corpus_tokens[top])
+    context = jnp.asarray(
+        np.stack([corpora[coll][0][t] for coll, t in zip(route, top)])
+    )
     prompts = jnp.concatenate([context, requests], axis=1)
     out = generate(state.params, arch, prompts, gen=8)
     print(f"generated continuation tokens:\n{np.asarray(out)}")

@@ -16,7 +16,11 @@ the saved artifact mirrors it literally:
 bit-identical ``SearchResult``s; ``load_index`` dispatches on the
 manifest's ``kind`` so any :class:`repro.core.protocol.VectorIndex`
 implementation (PageANN, the DiskANN/Starling baselines, or a mutable
-index) reloads through one entry point. A mutable index
+index) reloads through one entry point. One level up,
+``save_database`` / ``load_database`` persist a whole multi-collection
+service as ``db.json`` (collection name -> subdirectory, versioned the
+same way) over ordinary per-collection artifacts — the on-disk form of
+:class:`repro.serve.service.VectorService`. A mutable index
 (:class:`repro.core.delta.MutableIndex`) persists as kind="mutable": the
 frozen base as a nested artifact under ``base/`` plus a ``delta.npz``
 sidecar (inserted vectors + liveness + tombstones + external id map) and a
@@ -53,6 +57,35 @@ PAGES_BIN = "pages.bin"
 ARRAYS_NPZ = "arrays.npz"
 DELTA_NPZ = "delta.npz"
 BASE_SUBDIR = "base"
+
+# ---- database layout (a directory of named collections, see save_database)
+DB_FORMAT = "repro.vector_database"
+DB_VERSION = 1
+DB_MANIFEST = "db.json"
+DB_COLLECTIONS_SUBDIR = "collections"
+
+# collection names double as artifact subdirectory names, so they are
+# restricted to a filesystem- and manifest-safe alphabet up front — a
+# rejected create_collection beats a corrupted db.json or a path traversal
+_NAME_ALLOWED = (
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789._-"
+)
+
+
+def check_collection_name(name: str) -> str:
+    """Validate a collection name (also used as its on-disk subdirectory):
+    1-64 chars of [A-Za-z0-9._-], not starting with a dot or dash."""
+    if (
+        not isinstance(name, str)
+        or not 0 < len(name) <= 64
+        or name[0] in ".-"
+        or any(c not in _NAME_ALLOWED for c in name)
+    ):
+        raise ValueError(
+            f"invalid collection name {name!r}: need 1-64 chars of "
+            "[A-Za-z0-9._-] not starting with '.' or '-'"
+        )
+    return name
 
 
 class IndexFormatError(ValueError):
@@ -366,6 +399,104 @@ def load_mutable(directory: str):
     )
     index._directory = directory
     return index
+
+
+# ----------------------------------------------------------------- database
+def is_database_dir(directory: str) -> bool:
+    return os.path.isfile(os.path.join(directory, DB_MANIFEST))
+
+
+def read_db_manifest(directory: str) -> dict:
+    """Read and validate ``db.json`` (versioned exactly like index
+    manifests: wrong format / garbled JSON / version-ahead all raise
+    :class:`IndexFormatError` naming found vs supported)."""
+    path = os.path.join(directory, DB_MANIFEST)
+    if not os.path.isfile(path):
+        raise FileNotFoundError(f"no database manifest at {path}")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except json.JSONDecodeError as e:
+        raise IndexFormatError(f"{path}: database manifest is not valid JSON: {e}")
+    if doc.get("format") != DB_FORMAT:
+        raise IndexFormatError(f"{path}: not a {DB_FORMAT} manifest")
+    found = doc.get("version")
+    if found != DB_VERSION:
+        ahead = isinstance(found, int) and found > DB_VERSION
+        hint = (
+            "; database was written by a newer library — upgrade to read it"
+            if ahead else ""
+        )
+        raise IndexFormatError(
+            f"{path}: found database version {found}, this build supports "
+            f"version {DB_VERSION}{hint}"
+        )
+    if not isinstance(doc.get("collections"), dict):
+        raise IndexFormatError(f"{path}: manifest has no collections table")
+    return doc
+
+
+def _collection_subdir(name: str) -> str:
+    # stored with a literal "/" so db.json is platform-independent
+    return f"{DB_COLLECTIONS_SUBDIR}/{name}"
+
+
+def save_database(collections, directory: str) -> None:
+    """Persist a whole multi-collection service under one directory:
+
+      <dir>/db.json                versioned JSON: collection name -> subdir
+      <dir>/collections/<name>/    one full per-collection index artifact
+                                   (whatever kind each index persists as)
+
+    ``collections`` maps name -> any ``VectorIndex`` with ``save``.  For a
+    FRESH directory the manifest is written last (atomically: tmp +
+    rename), so a crash mid-save leaves a directory that ``load_database``
+    refuses (no db.json) rather than a silently partial database.
+    Re-saving over an existing database overwrites the per-collection
+    artifacts in place under the still-valid old manifest — for an atomic
+    replacement of a live database, save to a fresh sibling directory and
+    rename (the ``swap_mutable`` pattern).  Round-trips through
+    :func:`load_database` / ``repro.serve.VectorService.load``.
+    """
+    for name in collections:
+        check_collection_name(name)
+    os.makedirs(directory, exist_ok=True)
+    table = {}
+    for name, index in sorted(collections.items()):
+        sub = _collection_subdir(name)
+        index.save(os.path.join(directory, DB_COLLECTIONS_SUBDIR, name))
+        table[name] = sub
+    doc = dict(format=DB_FORMAT, version=DB_VERSION, collections=table)
+    path = os.path.join(directory, DB_MANIFEST)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load_database(directory: str) -> dict:
+    """Reload every collection of a saved database: name -> loaded
+    ``VectorIndex`` (each dispatched through :func:`load_index` on its
+    manifest kind). Searches on the loaded indexes are bit-identical to
+    the saved ones.
+
+    Artifact paths are derived from the VALIDATED collection names, never
+    from manifest values: a tampered ``db.json`` mapping a name outside
+    ``collections/`` is rejected, not followed."""
+    doc = read_db_manifest(directory)
+    out = {}
+    for name, sub in sorted(doc["collections"].items()):
+        check_collection_name(name)
+        want = _collection_subdir(name)
+        if sub != want:
+            raise IndexFormatError(
+                f"{directory}: collection {name!r} maps to unexpected "
+                f"path {sub!r} (expected {want!r})"
+            )
+        out[name] = load_index(
+            os.path.join(directory, DB_COLLECTIONS_SUBDIR, name)
+        )
+    return out
 
 
 # ----------------------------------------------------------------- dispatch

@@ -3,8 +3,13 @@
 Every searchable index in this repo — :class:`repro.core.index.PageANNIndex`
 and the DiskANN/Starling baselines in :mod:`repro.core.baselines` — speaks
 the same small surface, so benchmarks sweep all systems through one code
-path and the serving engine (:class:`repro.serve.BatchingEngine`) is
-implementation-agnostic:
+path and the serving layer is implementation-agnostic: the
+collection-agnostic :class:`repro.serve.BatchingEngine` batches requests
+per ``(collection, k-bin, params)`` group, and the database-level
+:class:`repro.serve.VectorService` registers any number of named
+``VectorIndex`` collections on one shared core (whole databases persist
+via ``repro.core.persist.save_database`` — a versioned ``db.json`` over
+per-collection artifacts):
 
   * ``search(queries, k=None, params=None) -> SearchResult`` — runtime
     knobs arrive per call as a :class:`repro.core.config.SearchParams`

@@ -8,6 +8,15 @@ lifecycle and retrieves neighbor ids for every prompt embedding before
 decoding: the build-once / serve-many workflow, no index rebuild in the
 serving process.
 
+``--db-dir`` loads a whole multi-collection DATABASE
+(``VectorService.load`` over a ``db.json`` artifact — see
+``repro.serve.service``) instead of one index: every prompt's retrieval is
+routed to a named collection through ONE shared service. ``--route`` picks
+the routing — a comma-separated list of ``:collection``-prefixed entries
+cycled over the prompt batch (e.g. ``--route :wiki,:notes`` sends prompt
+0 to ``wiki``, prompt 1 to ``notes``, prompt 2 to ``wiki``, …); it
+defaults to round-robin over every collection in the database.
+
 ``--mutable`` wraps the loaded index in a ``core.delta.MutableIndex`` (a
 loaded mutable artifact is already one) and exercises the write path
 end to end: the prompt embeddings are INSERTED as fresh documents through
@@ -17,7 +26,7 @@ DELETED again — the serving process takes writes without an index rebuild.
 Usage (CPU smoke; --arch defaults to granite-3-2b):
   PYTHONPATH=src python -m repro.launch.serve --smoke \
       --batch 4 --prompt-len 32 --gen 16 [--index-dir idx.pageann] \
-      [--mutable]
+      [--mutable] [--db-dir db/ [--route :wiki,:notes]]
 """
 from __future__ import annotations
 
@@ -68,7 +77,20 @@ def main(argv=None):
         help="serve the index through the mutable delta tier and exercise "
              "engine.insert / engine.delete with the prompt embeddings",
     )
+    ap.add_argument(
+        "--db-dir", default=None,
+        help="saved VectorService database directory (db.json): serve every "
+             "collection from one process and route each prompt's retrieval",
+    )
+    ap.add_argument(
+        "--route", default=None,
+        help="comma-separated :collection entries cycled over the prompt "
+             "batch (e.g. ':wiki,:notes'); default round-robins every "
+             "collection in the database",
+    )
     args = ap.parse_args(argv)
+    if args.db_dir and args.index_dir:
+        raise SystemExit("pass either --index-dir or --db-dir, not both")
 
     arch = get_arch(args.arch, smoke=args.smoke)
     if not arch.is_decoder:
@@ -78,7 +100,44 @@ def main(argv=None):
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, arch.vocab_size
     )
 
-    if args.index_dir:
+    if args.db_dir:
+        from repro.serve import VectorService
+
+        emb = np.asarray(
+            state.params["embed"][prompts].mean(axis=1), np.float32
+        )
+        with VectorService.load(args.db_dir, batch_size=args.batch) as svc:
+            names = svc.list_collections()
+            if not names:
+                raise SystemExit(f"{args.db_dir}: database has no collections")
+            route = [
+                entry.lstrip(":")
+                for entry in (args.route.split(",") if args.route else names)
+                if entry.lstrip(":")
+            ]
+            unknown = sorted(set(route) - set(names))
+            if unknown:
+                raise SystemExit(
+                    f"--route names unknown collections {unknown}; "
+                    f"database has {sorted(names)}"
+                )
+            targets = [route[i % len(route)] for i in range(len(emb))]
+            futs = [
+                svc.submit(coll, e, k=args.retrieve_k)
+                for coll, e in zip(targets, emb)
+            ]
+            svc.flush()
+            m = svc.metrics()
+            print(
+                f"loaded database {args.db_dir} "
+                f"({len(names)} collections: {', '.join(names)}); "
+                f"compile cache {m.compile_hits} hits / "
+                f"{m.compile_misses} misses"
+            )
+            for i, (coll, fut) in enumerate(zip(targets, futs)):
+                ids = np.asarray(fut.result().result.ids)
+                print(f"prompt {i} -> :{coll} -> ids {ids}")
+    elif args.index_dir:
         from repro.core import MutableIndex, load_index
         from repro.serve import BatchingEngine
 
@@ -92,26 +151,28 @@ def main(argv=None):
             raise SystemExit(
                 f"prompt embedding dim {emb.shape[1]} != index dim {index.dim}"
             )
-        engine = BatchingEngine.from_index(
+        with BatchingEngine.from_index(
             index, k=args.retrieve_k, batch_size=args.batch
-        )
-        rows = engine.search(emb)
-        ids = np.stack([r.result.ids for r in rows])
-        print(f"loaded {type(index).__name__} from {args.index_dir}; "
-              f"retrieved ids per prompt:\n{ids}")
-        if args.mutable:
-            # write path: insert the prompts as fresh documents, retrieve
-            # them back (exact match -> each prompt finds itself), drop them
-            new_ids = engine.insert(emb)
-            rows = engine.search(emb, k=1)
-            found = np.stack([r.result.ids for r in rows])[:, 0]
-            removed = engine.delete(new_ids)
-            m = engine.metrics()
-            print(f"mutable: inserted {m.inserts} docs -> ids {new_ids}; "
-                  f"self-retrieval {found}; deleted {removed}")
-            if not np.array_equal(np.sort(found), np.sort(new_ids)):
-                raise SystemExit("inserted prompts did not retrieve themselves")
-        engine.close()
+        ) as engine:
+            rows = engine.search(emb)
+            ids = np.stack([r.result.ids for r in rows])
+            print(f"loaded {type(index).__name__} from {args.index_dir}; "
+                  f"retrieved ids per prompt:\n{ids}")
+            if args.mutable:
+                # write path: insert the prompts as fresh documents, retrieve
+                # them back (exact match -> each prompt finds itself), drop
+                # them
+                new_ids = engine.insert(emb)
+                rows = engine.search(emb, k=1)
+                found = np.stack([r.result.ids for r in rows])[:, 0]
+                removed = engine.delete(new_ids)
+                m = engine.metrics()
+                print(f"mutable: inserted {m.inserts} docs -> ids {new_ids}; "
+                      f"self-retrieval {found}; deleted {removed}")
+                if not np.array_equal(np.sort(found), np.sort(new_ids)):
+                    raise SystemExit(
+                        "inserted prompts did not retrieve themselves"
+                    )
 
     t0 = time.perf_counter()
     out = generate(state.params, arch, prompts, args.gen)

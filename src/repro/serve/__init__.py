@@ -1,3 +1,19 @@
-from repro.serve.engine import BatchingEngine, EngineMetrics, RequestResult
+from repro.serve.compile_cache import CompileCache, CompileCacheStats
+from repro.serve.engine import (
+    DEFAULT_COLLECTION,
+    BatchingEngine,
+    EngineMetrics,
+    RequestResult,
+)
+from repro.serve.service import CollectionHandle, VectorService
 
-__all__ = ["BatchingEngine", "EngineMetrics", "RequestResult"]
+__all__ = [
+    "BatchingEngine",
+    "CollectionHandle",
+    "CompileCache",
+    "CompileCacheStats",
+    "DEFAULT_COLLECTION",
+    "EngineMetrics",
+    "RequestResult",
+    "VectorService",
+]

@@ -1,18 +1,28 @@
-"""Request-batching serving frontend for any ``VectorIndex`` backend.
+"""Request-batching serving core, collection-agnostic.
 
 The jitted search is fixed-shape: one compiled executable per (batch, k,
-SearchParams) triple. A serving workload, though, is a stream of single
-queries arriving at arbitrary times with per-request knobs. This engine
-bridges the two — the paper's "query threads" as a batching frontend:
+SearchParams, index geometry) signature. A serving workload, though, is a
+stream of single queries arriving at arbitrary times with per-request
+knobs, possibly aimed at different *collections* (per-tenant corpora,
+per-modality embeddings) served by one process. This engine bridges the
+two — the paper's "query threads" as a batching frontend:
 
-  * ``submit`` enqueues one query (optionally with its own ``k`` and
-    ``SearchParams``) and returns a future;
-  * requests are grouped by (k-bin, params): each distinct group fills its
-    own fixed-shape batch, so per-request knobs never force a recompile of
-    an already-warm executable. Per-request ``k`` is rounded UP to the
-    engine's ``k_bins`` grid (results trimmed back to the requested k), so
-    the number of compiled shapes — and the padding a small k pays — stays
-    bounded no matter how many distinct k values clients send;
+  * one or more named **collections** register a search backend each
+    (``add_collection``); ``submit`` enqueues one query (optionally with
+    its own ``k``/``SearchParams``/``collection``) and returns a future;
+  * requests are grouped by ``(collection, k-bin, params)``: each distinct
+    group fills its own fixed-shape batch, so per-request knobs never
+    force a recompile of an already-warm executable. Per-request ``k`` is
+    rounded UP to the engine's ``k_bins`` grid (results trimmed back to
+    the requested k), so the number of compiled shapes — and the padding a
+    small k pays — stays bounded no matter how many distinct k values
+    clients send;
+  * the **compiled executable is keyed by geometry**, not by collection:
+    a shared :class:`repro.serve.compile_cache.CompileCache` tracks
+    (geometry, batch, resolved params) signatures, so two collections
+    with identical geometry dispatch through one warm executable — the
+    second collection compiles nothing (hit/miss counters ride
+    ``metrics()``);
   * a group dispatches when ``batch_size`` of its requests are pending,
     when ``timeout_ms`` elapses after the first pending request, or on an
     explicit ``flush`` — whichever comes first. The search runs in the
@@ -27,10 +37,17 @@ The engine lock covers only queue and counter bookkeeping — the search
 itself runs outside it, so other threads keep enqueuing (and the next
 batch keeps filling) while a batch computes.
 
-The backend is any ``fn(queries (B, d), k, params) -> SearchResult``-like
-pytree with a leading batch axis. ``from_index`` wraps anything speaking
-the :class:`repro.core.protocol.VectorIndex` protocol — ``PageANNIndex``
-(optionally sharded over a mesh) or the DiskANN/Starling baselines.
+A collection backend is any ``fn(queries (B, d), k, params) ->
+SearchResult``-like pytree with a leading batch axis. ``from_index``
+remains the one-collection convenience: it wraps anything speaking the
+:class:`repro.core.protocol.VectorIndex` protocol under the collection
+name ``"default"``, so pre-multi-collection call sites keep working
+unchanged. The database-level surface (create/attach/drop/save/load of
+whole collections) lives one layer up in
+:class:`repro.serve.service.VectorService`.
+
+The engine is a context manager; ``close()`` flushes pending groups and
+is idempotent.
 """
 from __future__ import annotations
 
@@ -44,6 +61,9 @@ import jax
 import numpy as np
 
 from repro.core.config import SearchParams
+from repro.serve.compile_cache import CompileCache, geometry_of, unshared_token
+
+DEFAULT_COLLECTION = "default"
 
 
 class RequestResult(NamedTuple):
@@ -58,7 +78,12 @@ class RequestResult(NamedTuple):
 class EngineMetrics(NamedTuple):
     requests: int
     batches: int
-    qps: float                 # completed requests / wall time since first submit
+    # completed requests / wall-clock between the first submit and the most
+    # recent demux. 0.0 until at least one dispatch has completed AND a
+    # nonzero wall has elapsed — a single instantaneous batch (or a mocked
+    # clock) has no measurable wall, and reporting inf for it poisoned
+    # downstream aggregation.
+    qps: float
     latency_ms_mean: float     # over the trailing latency window
     latency_ms_p50: float
     latency_ms_p99: float
@@ -68,6 +93,10 @@ class EngineMetrics(NamedTuple):
     inserts: int = 0           # vectors written through engine.insert
     deletes: int = 0           # ids removed through engine.delete
     compactions: int = 0       # compact() calls that folded the delta
+    collections: int = 0       # registered collections
+    compile_hits: int = 0      # dispatches served by an already-warm executable
+    compile_misses: int = 0    # dispatches that compiled a new executable
+    compiled_executables: int = 0  # distinct (geometry, batch, params) signatures
 
 
 class _Pending(NamedTuple):
@@ -77,12 +106,28 @@ class _Pending(NamedTuple):
     t_submit: float
 
 
+class _Collection(NamedTuple):
+    """One named backend behind the shared batching core."""
+
+    name: str
+    search_fn: Callable[[np.ndarray, int, SearchParams | None], Any]
+    dim: int
+    default_k: int
+    default_params: SearchParams | None
+    geometry: tuple      # compile-cache geometry key (see compile_cache)
+    resolve_fn: Callable | None   # (k, params) -> resolved SearchParams
+    insert_fn: Callable | None
+    delete_fn: Callable | None
+    compact_fn: Callable | None
+
+
 class BatchingEngine:
     def __init__(
         self,
-        search_fn: Callable[[np.ndarray, int, SearchParams | None], Any],
+        search_fn: Callable[[np.ndarray, int, SearchParams | None], Any]
+        | None = None,
         *,
-        dim: int,
+        dim: int | None = None,
         batch_size: int = 64,
         timeout_ms: float | None = None,
         default_k: int | None = None,
@@ -94,39 +139,29 @@ class BatchingEngine:
         insert_fn: Callable[[np.ndarray, Any], np.ndarray] | None = None,
         delete_fn: Callable[[Any], int] | None = None,
         compact_fn: Callable[[], bool] | None = None,
+        compile_cache: CompileCache | None = None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         if k_bins is not None and (not k_bins or min(k_bins) < 1):
             raise ValueError("k_bins must be a non-empty tuple of positive ints")
-        self._search_fn = search_fn
-        self._dim = dim
         self._batch_size = batch_size
         self._timeout_ms = timeout_ms
-        # same precedence as resolve_search_params: an explicit default_k
-        # wins, otherwise the configured params speak, otherwise k=10
-        if default_k is None:
-            default_k = (
-                default_params.k if default_params is not None else 10
-            )
-        self._default_k = default_k
-        self._default_params = default_params
         self._k_bins = tuple(sorted(k_bins)) if k_bins else None
         self._dtype = dtype
         self._clock = clock
         self._lock = threading.RLock()
-        # (k_bin, params) -> pending requests of that shape/knob group
+        self._collections: dict[str, _Collection] = {}
+        # (collection, k_bin, params) -> pending requests of that group
         self._pending: dict[tuple, list[_Pending]] = {}
         self._timer: threading.Timer | None = None
         self._timer_gen = 0     # invalidates stale timers (see _flush_due)
         self._closed = False
+        self._compile_cache = compile_cache or CompileCache()
         # aggregate counters (window-bounded where they would otherwise grow)
         self._latencies_ms: collections.deque = collections.deque(
             maxlen=latency_window
         )
-        self._insert_fn = insert_fn
-        self._delete_fn = delete_fn
-        self._compact_fn = compact_fn
         self._inserts = 0
         self._deletes = 0
         self._compactions = 0
@@ -137,6 +172,168 @@ class BatchingEngine:
         self._padded_rows = 0
         self._t_first: float | None = None
         self._t_last: float | None = None
+        if search_fn is not None:
+            # one-collection compatibility construction: the raw backend
+            # becomes the "default" collection
+            if dim is None:
+                raise ValueError("dim is required when search_fn is given")
+            self.add_collection(
+                DEFAULT_COLLECTION,
+                search_fn,
+                dim=dim,
+                default_k=default_k,
+                default_params=default_params,
+                insert_fn=insert_fn,
+                delete_fn=delete_fn,
+                compact_fn=compact_fn,
+            )
+        elif any(
+            f is not None
+            for f in (dim, default_k, default_params, insert_fn, delete_fn,
+                      compact_fn)
+        ):
+            raise ValueError(
+                "per-collection arguments need search_fn (or use "
+                "add_collection on an empty engine)"
+            )
+
+    # ------------------------------------------------------- context manager
+    def __enter__(self) -> "BatchingEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    # ---------------------------------------------------------- collections
+    def add_collection(
+        self,
+        name: str,
+        search_fn: Callable[[np.ndarray, int, SearchParams | None], Any]
+        | None = None,
+        *,
+        index=None,
+        dim: int | None = None,
+        default_k: int | None = None,
+        default_params: SearchParams | None = None,
+        insert_fn: Callable | None = None,
+        delete_fn: Callable | None = None,
+        compact_fn: Callable | None = None,
+        geometry: tuple | None = None,
+        resolve_fn: Callable | None = None,
+        mesh=None,
+    ) -> None:
+        """Register a named collection on the shared batching core.
+
+        Either pass a raw ``search_fn`` + ``dim``, or ``index=`` anything
+        speaking the :class:`repro.core.protocol.VectorIndex` protocol —
+        its search/write surface and compile-cache geometry are derived
+        automatically (a ``MutableVectorIndex`` wires insert/delete/
+        compact; a ``PageANNIndex`` with ``mesh=`` dispatches
+        ``shard_search`` over it).
+        """
+        if not name or not isinstance(name, str):
+            raise ValueError("collection name must be a non-empty string")
+        if index is not None:
+            if search_fn is not None:
+                raise ValueError("pass either search_fn or index, not both")
+
+            def search_fn(queries, k_bin, p, _index=index, _mesh=mesh):
+                if _mesh is not None:
+                    return _index.search(queries, k=k_bin, params=p, mesh=_mesh)
+                return _index.search(queries, k=k_bin, params=p)
+
+            dim = index.dim
+            if default_params is None:
+                default_params = getattr(index, "default_params", None)
+            geometry = geometry if geometry is not None else geometry_of(index)
+            if mesh is not None:
+                # a mesh-dispatched collection compiles shard_search, not
+                # batch_search: same index geometry, different executable —
+                # the mesh must be part of the compile identity
+                geometry = geometry + (("mesh", mesh),)
+            if resolve_fn is None:
+                resolve_fn = getattr(index, "resolve_params", None)
+            insert_fn = insert_fn or getattr(index, "insert", None)
+            delete_fn = delete_fn or getattr(index, "delete", None)
+            compact_fn = compact_fn or getattr(index, "compact", None)
+        if search_fn is None or dim is None:
+            raise ValueError("add_collection needs (search_fn, dim) or index=")
+        # same precedence as resolve_search_params: an explicit default_k
+        # wins, otherwise the configured params speak, otherwise k=10
+        if default_k is None:
+            default_k = default_params.k if default_params is not None else 10
+        if geometry is None:
+            # a raw closure's compiled identity is the closure itself
+            geometry = ("fn", unshared_token(search_fn))
+        col = _Collection(
+            name=name,
+            search_fn=search_fn,
+            dim=int(dim),
+            default_k=int(default_k),
+            default_params=default_params,
+            geometry=geometry,
+            resolve_fn=resolve_fn,
+            insert_fn=insert_fn,
+            delete_fn=delete_fn,
+            compact_fn=compact_fn,
+        )
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            if name in self._collections:
+                raise ValueError(f"collection {name!r} already exists")
+            self._collections[name] = col
+
+    def remove_collection(self, name: str) -> None:
+        """Unregister ``name`` after dispatching its pending groups. Later
+        submits to it raise ``KeyError``; other collections are untouched.
+
+        Loops flush -> check-empty-under-lock -> pop, because a concurrent
+        ``submit`` that resolved the collection before this call may enqueue
+        *between* a flush and the pop; popping only once the collection's
+        pending set is observed empty under the lock (after which submit's
+        own under-lock registration re-check raises) guarantees no future
+        is stranded undispatched."""
+        with self._lock:
+            if name not in self._collections:
+                raise KeyError(f"no collection {name!r}")
+        while True:
+            self.flush(collection=name)
+            with self._lock:
+                if not any(
+                    grp and key[0] == name
+                    for key, grp in self._pending.items()
+                ):
+                    self._collections.pop(name, None)
+                    return
+
+    def collections(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._collections))
+
+    def _resolve_collection(self, name: str | None) -> _Collection:
+        """Route a request: an explicit name must exist; ``None`` falls back
+        to the sole registered collection (or one literally named
+        "default"), so one-collection engines keep the old call shape."""
+        with self._lock:
+            if name is not None:
+                try:
+                    return self._collections[name]
+                except KeyError:
+                    raise KeyError(
+                        f"no collection {name!r}; have "
+                        f"{sorted(self._collections)}"
+                    ) from None
+            if len(self._collections) == 1:
+                return next(iter(self._collections.values()))
+            if DEFAULT_COLLECTION in self._collections:
+                return self._collections[DEFAULT_COLLECTION]
+            if not self._collections:
+                raise RuntimeError("engine has no collections")
+            raise ValueError(
+                "multiple collections are registered; pass collection= "
+                f"(one of {sorted(self._collections)})"
+            )
 
     # ------------------------------------------------------------- requests
     def _bin_k(self, k: int) -> int:
@@ -154,29 +351,40 @@ class BatchingEngine:
         *,
         k: int | None = None,
         params: SearchParams | None = None,
+        collection: str | None = None,
     ) -> Future:
         """Enqueue one (d,) query; returns a Future[RequestResult].
 
-        ``k``/``params`` default to the engine's; requests sharing a
-        (k-bin, params) group share one fixed-shape dispatch.
+        ``k``/``params`` default to the target collection's; requests
+        sharing a (collection, k-bin, params) group share one fixed-shape
+        dispatch.
         """
+        col = self._resolve_collection(collection)
         q = np.asarray(query, self._dtype).reshape(-1)
-        if q.shape[0] != self._dim:
-            raise ValueError(f"query dim {q.shape[0]} != engine dim {self._dim}")
+        if q.shape[0] != col.dim:
+            raise ValueError(
+                f"query dim {q.shape[0]} != collection {col.name!r} dim "
+                f"{col.dim}"
+            )
         if k is None:
             # an explicit SearchParams speaks for the request: its k wins
-            # over the engine default unless the kwarg overrides it
-            k = params.k if params is not None else self._default_k
+            # over the collection default unless the kwarg overrides it
+            k = params.k if params is not None else col.default_k
         k = int(k)
         if k < 1:
             raise ValueError("k must be >= 1")
-        params = params if params is not None else self._default_params
-        key = (self._bin_k(k), params)
+        params = params if params is not None else col.default_params
+        key = (col.name, self._bin_k(k), params)
         fut: Future = Future()
         batch = None
         with self._lock:
             if self._closed:
                 raise RuntimeError("engine is closed")
+            if col.name not in self._collections:
+                # lost a race with remove_collection after resolving the
+                # collection: refuse rather than strand the future in a
+                # group nothing will ever dispatch
+                raise KeyError(f"no collection {col.name!r}")
             if self._t_first is None:
                 self._t_first = self._clock()
             group = self._pending.setdefault(key, [])
@@ -189,13 +397,18 @@ class BatchingEngine:
             self._run_batch(key, batch)
         return fut
 
-    def flush(self) -> None:
-        """Dispatch whatever is pending in every group, padding ragged
-        batches."""
+    def flush(self, collection: str | None = None) -> None:
+        """Dispatch whatever is pending — in every group, or only the named
+        collection's groups — padding ragged batches."""
         while True:
             with self._lock:
                 key = next(
-                    (key for key, grp in self._pending.items() if grp), None
+                    (
+                        key
+                        for key, grp in self._pending.items()
+                        if grp and (collection is None or key[0] == collection)
+                    ),
+                    None,
                 )
                 batch = self._take_locked(key) if key is not None else None
             if batch is None:
@@ -208,60 +421,81 @@ class BatchingEngine:
         *,
         k: int | None = None,
         params: SearchParams | None = None,
+        collection: str | None = None,
     ) -> list[RequestResult]:
         """Synchronous convenience: submit a (Q, d) batch, flush, gather."""
         futs = [
-            self.submit(q, k=k, params=params) for q in np.asarray(queries)
+            self.submit(q, k=k, params=params, collection=collection)
+            for q in np.asarray(queries)
         ]
-        self.flush()
+        self.flush(collection=collection)
         return [f.result() for f in futs]
 
     # --------------------------------------------------------------- writes
-    # Write requests run inline against the mutable backend; the backend
-    # (``core.delta.MutableIndex``) publishes each mutation as ONE atomic
-    # state swap, so in-flight search dispatches — which snapshot that
-    # state lock-free at backend-call time — interleave safely: a search
-    # sees either the pre- or post-write index, never a half-applied one.
+    # Write requests run inline against the collection's mutable backend;
+    # the backend (``core.delta.MutableIndex``) publishes each mutation as
+    # ONE atomic state swap, so in-flight search dispatches — which
+    # snapshot that state lock-free at backend-call time — interleave
+    # safely: a search sees either the pre- or post-write index, never a
+    # half-applied one.
 
-    def insert(self, vectors: np.ndarray, ids=None) -> np.ndarray:
-        """Insert vectors into the mutable backend; returns their external
-        ids. Raises if the engine wraps an immutable index."""
-        if self._insert_fn is None:
-            raise RuntimeError("engine backend does not support insert")
+    def insert(
+        self, vectors: np.ndarray, ids=None, *, collection: str | None = None
+    ) -> np.ndarray:
+        """Insert vectors into a collection's mutable backend; returns their
+        external ids. Raises if the collection wraps an immutable index."""
+        col = self._resolve_collection(collection)
+        if col.insert_fn is None:
+            raise RuntimeError(
+                f"collection {col.name!r} does not support insert"
+            )
         with self._lock:
             if self._closed:
                 raise RuntimeError("engine is closed")
-        vectors = np.asarray(vectors, self._dtype).reshape(-1, self._dim)
-        out = self._insert_fn(vectors, ids)
+        vectors = np.asarray(vectors, self._dtype).reshape(-1, col.dim)
+        out = col.insert_fn(vectors, ids)
         with self._lock:
             self._inserts += vectors.shape[0]
         return out
 
-    def delete(self, ids) -> int:
-        """Delete ids from the mutable backend; returns how many were live."""
-        if self._delete_fn is None:
-            raise RuntimeError("engine backend does not support delete")
+    def delete(self, ids, *, collection: str | None = None) -> int:
+        """Delete ids from a collection's mutable backend; returns how many
+        were live."""
+        col = self._resolve_collection(collection)
+        if col.delete_fn is None:
+            raise RuntimeError(
+                f"collection {col.name!r} does not support delete"
+            )
         with self._lock:
             if self._closed:
                 raise RuntimeError("engine is closed")
-        removed = self._delete_fn(ids)
+        removed = col.delete_fn(ids)
         with self._lock:
             self._deletes += removed
         return removed
 
-    def compact(self) -> bool:
-        """Fold the backend's delta tier into a fresh base artifact.
+    def compact(self, *, collection: str | None = None) -> bool:
+        """Fold a collection's delta tier into a fresh base artifact.
         Pending searches keep completing against the pre-compaction
         snapshot while the rebuild runs."""
-        if self._compact_fn is None:
-            raise RuntimeError("engine backend does not support compact")
-        did = self._compact_fn()
+        col = self._resolve_collection(collection)
+        if col.compact_fn is None:
+            raise RuntimeError(
+                f"collection {col.name!r} does not support compact"
+            )
+        did = col.compact_fn()
         if did:
             with self._lock:
                 self._compactions += 1
         return did
 
     def close(self) -> None:
+        """Flush pending groups and shut down. Idempotent — a second
+        ``close()`` (e.g. explicit call inside a ``with`` block) is a
+        no-op."""
+        with self._lock:
+            if self._closed:
+                return
         self.flush()
         with self._lock:
             self._closed = True
@@ -328,18 +562,19 @@ class BatchingEngine:
     def _take_locked(self, key: tuple) -> tuple[int, list[_Pending]]:
         """Pop up to batch_size pending requests of one group and retire the
         live timer — re-arming it when OTHER groups still hold pending
-        requests, so a size-triggered dispatch of one (k-bin, params) group
-        never strands another group's waiters. Caller must hold the lock;
-        the batch index is assigned here so dispatch order matches take
-        order even with concurrent submitters."""
+        requests, so a size-triggered dispatch of one (collection, k-bin,
+        params) group never strands another group's waiters. Caller must
+        hold the lock; the batch index is assigned here so dispatch order
+        matches take order even with concurrent submitters."""
         group = self._pending.get(key, [])
         take = group[: self._batch_size]
         rest = group[self._batch_size:]
         if rest:
             self._pending[key] = rest
         else:
-            # drop drained keys: distinct (k, params) combinations must not
-            # accumulate empty entries in a long-lived server
+            # drop drained keys: distinct (collection, k, params)
+            # combinations must not accumulate empty entries in a
+            # long-lived server
             self._pending.pop(key, None)
         self._timer_gen += 1
         if self._timer is not None:
@@ -352,19 +587,47 @@ class BatchingEngine:
 
     def _run_batch(self, key: tuple, batch: tuple[int, list[_Pending]]) -> None:
         """Pad, search (outside the lock), record counters, demux."""
-        k_bin, params = key
+        name, k_bin, params = key
         batch_index, take = batch
         n = len(take)
-        padded = np.zeros((self._batch_size, self._dim), self._dtype)
+        with self._lock:
+            col = self._collections.get(name)
+        if col is None:
+            # the collection was dropped between take and run (concurrent
+            # remove_collection): fail this group's waiters, not the engine
+            exc = RuntimeError(f"collection {name!r} was dropped")
+            with self._lock:
+                self._dispatched_rows += self._batch_size
+                self._padded_rows += self._batch_size - n
+            for p in take:
+                p.future.set_exception(exc)
+            return
+        padded = np.zeros((self._batch_size, col.dim), self._dtype)
         for i, p in enumerate(take):
             padded[i] = p.query
+        # compiled-executable accounting: the cache key is the collection's
+        # GEOMETRY (not its name) plus everything else static in the jit
+        # signature — batch shape and the resolved runtime knobs — so two
+        # same-geometry collections register as one executable
         try:
-            out = self._search_fn(padded, k_bin, params)
+            resolved = (
+                col.resolve_fn(k_bin, params)
+                if col.resolve_fn is not None
+                else (k_bin, params)
+            )
+        except Exception:
+            resolved = (k_bin, params)
+        self._compile_cache.note(
+            col.geometry + (self._batch_size, resolved)
+        )
+        try:
+            out = col.search_fn(padded, k_bin, params)
             out = jax.tree.map(np.asarray, out)
         except Exception as e:
-            # a backend failure must reach every waiter through its future —
-            # not hang them, and not vanish into the timer thread's
-            # excepthook (submit/flush never raise backend errors)
+            # a backend failure must reach every waiter of THIS group
+            # through its future — not hang them, not vanish into the timer
+            # thread's excepthook, and not poison other groups' dispatches
+            # (submit/flush never raise backend errors)
             with self._lock:
                 self._dispatched_rows += self._batch_size
                 self._padded_rows += self._batch_size - n
@@ -404,6 +667,7 @@ class BatchingEngine:
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> EngineMetrics:
+        cc = self._compile_cache.stats()
         with self._lock:
             lat = np.asarray(self._latencies_ms, np.float64)
             done = self._completed
@@ -415,7 +679,7 @@ class BatchingEngine:
             return EngineMetrics(
                 requests=done,
                 batches=self._batches,
-                qps=done / wall if wall > 0 else float(done and np.inf),
+                qps=done / wall if wall > 0 else 0.0,
                 latency_ms_mean=float(lat.mean()) if len(lat) else 0.0,
                 latency_ms_p50=float(np.percentile(lat, 50)) if len(lat) else 0.0,
                 latency_ms_p99=float(np.percentile(lat, 99)) if len(lat) else 0.0,
@@ -433,6 +697,10 @@ class BatchingEngine:
                 inserts=self._inserts,
                 deletes=self._deletes,
                 compactions=self._compactions,
+                collections=len(self._collections),
+                compile_hits=cc.hits,
+                compile_misses=cc.misses,
+                compiled_executables=cc.unique,
             )
 
     # ------------------------------------------------------------- builders
@@ -449,32 +717,31 @@ class BatchingEngine:
         mesh=None,
         **kwargs,
     ) -> "BatchingEngine":
-        """Engine over any built/loaded ``VectorIndex``; results carry
-        ORIGINAL vector ids.
+        """One-collection engine over any built/loaded ``VectorIndex``;
+        results carry ORIGINAL vector ids.
 
-        The backend is the protocol's ``index.search(queries, k, params)``
-        — PageANN, DiskANN, Starling, or a ``MutableIndex`` alike. When the
-        index speaks the ``MutableVectorIndex`` writes
+        Thin compatibility wrapper over the multi-collection core: the
+        index is registered as the collection named ``"default"``, so the
+        pre-service call shape (``submit`` with no collection) keeps
+        working. The backend is the protocol's ``index.search(queries, k,
+        params)`` — PageANN, DiskANN, Starling, or a ``MutableIndex``
+        alike. When the index speaks the ``MutableVectorIndex`` writes
         (insert/delete/compact), the engine exposes them as request types
         that interleave safely with in-flight searches. For a
         ``PageANNIndex``, passing a mesh (see ``launch.mesh``) dispatches
         ``shard_search`` with the query batch split across it.
         """
-        def fn(queries: np.ndarray, k_bin: int, p: SearchParams | None):
-            if mesh is not None:
-                return index.search(queries, k=k_bin, params=p, mesh=mesh)
-            return index.search(queries, k=k_bin, params=p)
-
-        return cls(
-            fn,
-            dim=index.dim,
+        eng = cls(
             batch_size=batch_size,
             timeout_ms=timeout_ms,
-            default_k=k,
-            default_params=params,
             k_bins=k_bins,
-            insert_fn=getattr(index, "insert", None),
-            delete_fn=getattr(index, "delete", None),
-            compact_fn=getattr(index, "compact", None),
             **kwargs,
         )
+        eng.add_collection(
+            DEFAULT_COLLECTION,
+            index=index,
+            default_k=k,
+            default_params=params,
+            mesh=mesh,
+        )
+        return eng

@@ -1,0 +1,309 @@
+"""Database-level serving API: many named collections, one process.
+
+The paper frames PageANN as the engine of a vector database; this module
+is the database surface. A :class:`VectorService` owns
+
+  * a **collection registry** — named :class:`repro.core.protocol.
+    VectorIndex` artifacts (built in-process, or attached from disk), each
+    registered on
+  * one shared :class:`repro.serve.engine.BatchingEngine` core — a single
+    batching/timer/demux loop whose pending groups are keyed by
+    ``(collection, k-bin, params)``, so every collection gets fixed-shape
+    dispatches without its own process, its own metrics machinery, or its
+    own timer thread, and
+  * one shared :class:`repro.serve.compile_cache.CompileCache` — compiled
+    search executables are keyed by *geometry* (dim, page capacity, memory
+    mode, array shapes, batch, resolved params), not by collection, so
+    attaching a second collection with the geometry of an already-warm one
+    compiles **zero** new executables (observable in ``metrics()``).
+
+Lifecycle::
+
+    with VectorService(batch_size=64, timeout_ms=2.0) as svc:
+        svc.create_collection("wiki", index)          # built VectorIndex
+        svc.create_collection("notes", cfg, vectors)  # build from a config
+        svc.attach("prod", "artifacts/prod_idx")      # load from disk
+        fut = svc.submit("wiki", query, k=10)         # routed dispatch
+        svc.insert("notes", fresh_vectors)            # writes, if mutable
+        svc.save("db_dir")                            # whole database
+
+    svc = VectorService.load("db_dir")                # round-trips
+
+On disk a database is ``db.json`` (collection name -> subdirectory,
+versioned like index manifests) over ordinary per-collection artifacts —
+see ``repro.core.persist.save_database``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Iterator
+
+import numpy as np
+
+from repro.core import persist
+from repro.core.config import PageANNConfig, SearchParams
+from repro.serve.compile_cache import CompileCache
+from repro.serve.engine import BatchingEngine, EngineMetrics, RequestResult
+
+
+class CollectionHandle:
+    """A bound view of one named collection: the service's routing surface
+    with the name pre-applied. Handles stay cheap and stateless — dropping
+    the collection invalidates the handle (later calls raise KeyError)."""
+
+    __slots__ = ("_service", "name")
+
+    def __init__(self, service: "VectorService", name: str):
+        self._service = service
+        self.name = name
+
+    @property
+    def index(self):
+        """The underlying ``VectorIndex`` (e.g. for ``stats`` / ``save``)."""
+        return self._service.index_of(self.name)
+
+    def submit(self, query, *, k=None, params=None):
+        return self._service.submit(self.name, query, k=k, params=params)
+
+    def search(self, queries, *, k=None, params=None):
+        return self._service.search(self.name, queries, k=k, params=params)
+
+    def insert(self, vectors, ids=None):
+        return self._service.insert(self.name, vectors, ids)
+
+    def delete(self, ids):
+        return self._service.delete(self.name, ids)
+
+    def compact(self):
+        return self._service.compact(self.name)
+
+    def __repr__(self) -> str:
+        return f"CollectionHandle({self.name!r})"
+
+
+class VectorService:
+    """One serving process, many named vector collections (see module
+    docstring). All engine knobs (``batch_size``, ``timeout_ms``,
+    ``k_bins``, …) are shared across collections — they shape the batching
+    core, not any one index."""
+
+    def __init__(
+        self,
+        *,
+        batch_size: int = 64,
+        timeout_ms: float | None = None,
+        k_bins: tuple[int, ...] | None = None,
+        compile_cache: CompileCache | None = None,
+        **engine_kwargs: Any,
+    ):
+        self._compile_cache = compile_cache or CompileCache()
+        self._engine = BatchingEngine(
+            batch_size=batch_size,
+            timeout_ms=timeout_ms,
+            k_bins=k_bins,
+            compile_cache=self._compile_cache,
+            **engine_kwargs,
+        )
+        self._lock = threading.Lock()
+        self._indexes: dict[str, Any] = {}
+        self._closed = False
+
+    # ------------------------------------------------------- context manager
+    def __enter__(self) -> "VectorService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Flush and shut down the shared engine. Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._engine.close()
+
+    # ------------------------------------------------- collection lifecycle
+    def create_collection(
+        self,
+        name: str,
+        index_or_cfg,
+        vectors: np.ndarray | None = None,
+        *,
+        k: int | None = None,
+        params: SearchParams | None = None,
+        mesh=None,
+        **build_kwargs: Any,
+    ) -> CollectionHandle:
+        """Register a new collection under ``name``.
+
+        ``index_or_cfg`` is either an already built/loaded ``VectorIndex``,
+        or a :class:`PageANNConfig` — then ``vectors`` supplies the corpus
+        and the index is built here (``build_kwargs`` forwarded to
+        ``PageANNIndex.build``). ``k``/``params`` set the collection's
+        serving defaults; ``mesh`` routes its dispatches through
+        ``shard_search``.
+        """
+        persist.check_collection_name(name)
+        if isinstance(index_or_cfg, PageANNConfig):
+            if vectors is None:
+                raise ValueError(
+                    "create_collection from a PageANNConfig needs vectors"
+                )
+            from repro.core.index import PageANNIndex
+
+            index = PageANNIndex.build(
+                np.asarray(vectors, np.float32), index_or_cfg, **build_kwargs
+            )
+        else:
+            if vectors is not None:
+                raise ValueError(
+                    "vectors only apply when building from a PageANNConfig"
+                )
+            index = index_or_cfg
+            if not (hasattr(index, "search") and hasattr(index, "dim")):
+                raise TypeError(
+                    f"{type(index).__name__} does not implement the "
+                    "VectorIndex protocol (need search + dim)"
+                )
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("service is closed")
+            if name in self._indexes:
+                raise ValueError(f"collection {name!r} already exists")
+            self._indexes[name] = index
+        try:
+            self._engine.add_collection(
+                name, index=index, default_k=k, default_params=params,
+                mesh=mesh,
+            )
+        except Exception:
+            with self._lock:
+                self._indexes.pop(name, None)
+            raise
+        return CollectionHandle(self, name)
+
+    def attach(
+        self,
+        name: str,
+        directory: str,
+        *,
+        k: int | None = None,
+        params: SearchParams | None = None,
+        mesh=None,
+    ) -> CollectionHandle:
+        """Load a persisted index artifact (any manifest kind) from
+        ``directory`` and register it as collection ``name``."""
+        persist.check_collection_name(name)
+        return self.create_collection(
+            name, persist.load_index(directory), k=k, params=params, mesh=mesh
+        )
+
+    def drop(self, name: str) -> None:
+        """Unregister ``name``: its pending requests are dispatched first,
+        then later routing to it raises ``KeyError``. The index object (and
+        anything it has persisted on disk) is left untouched."""
+        with self._lock:
+            if name not in self._indexes:
+                raise KeyError(f"no collection {name!r}")
+        self._engine.remove_collection(name)
+        with self._lock:
+            self._indexes.pop(name, None)
+
+    def list_collections(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._indexes))
+
+    def collection(self, name: str) -> CollectionHandle:
+        """A bound handle for ``name`` (KeyError if it does not exist)."""
+        self.index_of(name)  # existence check
+        return CollectionHandle(self, name)
+
+    def index_of(self, name: str):
+        with self._lock:
+            try:
+                return self._indexes[name]
+            except KeyError:
+                raise KeyError(
+                    f"no collection {name!r}; have {sorted(self._indexes)}"
+                ) from None
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._indexes
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._indexes)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.list_collections())
+
+    # -------------------------------------------------------------- routing
+    def submit(
+        self,
+        collection: str,
+        query: np.ndarray,
+        *,
+        k: int | None = None,
+        params: SearchParams | None = None,
+    ):
+        """Enqueue one query for ``collection``; returns a
+        Future[RequestResult]. Requests sharing a (collection, k-bin,
+        params) group share one fixed-shape dispatch on the common core."""
+        return self._engine.submit(query, k=k, params=params,
+                                   collection=collection)
+
+    def search(
+        self,
+        collection: str,
+        queries: np.ndarray,
+        *,
+        k: int | None = None,
+        params: SearchParams | None = None,
+    ) -> list[RequestResult]:
+        """Synchronous convenience: submit a (Q, d) batch, flush, gather."""
+        return self._engine.search(queries, k=k, params=params,
+                                   collection=collection)
+
+    def flush(self, collection: str | None = None) -> None:
+        self._engine.flush(collection=collection)
+
+    # --------------------------------------------------------------- writes
+    def insert(self, collection: str, vectors, ids=None) -> np.ndarray:
+        return self._engine.insert(vectors, ids, collection=collection)
+
+    def delete(self, collection: str, ids) -> int:
+        return self._engine.delete(ids, collection=collection)
+
+    def compact(self, collection: str) -> bool:
+        return self._engine.compact(collection=collection)
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> EngineMetrics:
+        """Aggregate serving metrics of the shared core, including the
+        compile-cache hit/miss/unique-executable counters."""
+        return self._engine.metrics()
+
+    # ------------------------------------------------------------ lifecycle
+    def save(self, directory: str) -> None:
+        """Persist every collection under ``directory`` as one database
+        (``db.json`` + per-collection artifacts); round-trips through
+        :meth:`load`."""
+        with self._lock:
+            snapshot = dict(self._indexes)
+        persist.save_database(snapshot, directory)
+
+    @classmethod
+    def load(cls, directory: str, **service_kwargs: Any) -> "VectorService":
+        """Reopen a saved database as a ready-to-serve service: every
+        collection in ``db.json`` is loaded (whatever index kind it
+        persisted as) and registered on a fresh shared core."""
+        svc = cls(**service_kwargs)
+        try:
+            for name, index in persist.load_database(directory).items():
+                svc.create_collection(name, index)
+        except Exception:
+            svc.close()
+            raise
+        return svc

@@ -243,6 +243,138 @@ def test_per_request_params_match_direct_search(index):
     )
 
 
+# ------------------------------------------------- multi-collection core
+def test_submit_routes_to_named_collection():
+    """The batching core is collection-agnostic: distinct collections form
+    distinct (collection, k-bin, params) groups with their own dims and
+    backends, on one shared engine."""
+    shapes_a, shapes_b = [], []
+    eng = BatchingEngine(batch_size=2)
+    eng.add_collection("a", _toy_search_fn(shapes_a), dim=4, default_k=3)
+    eng.add_collection("b", _toy_search_fn(shapes_b), dim=6, default_k=2)
+    assert eng.collections() == ("a", "b")
+    fa = [eng.submit(np.full(4, i, np.float32), collection="a")
+          for i in range(2)]
+    fb = eng.submit(np.full(6, 7.0, np.float32), collection="b")
+    eng.flush()
+    for i, f in enumerate(fa):
+        r = f.result(timeout=30)
+        assert r.result.ids.shape == (3,) and r.result.ids[0] == i
+    assert fb.result(timeout=30).result.ids.shape == (2,)
+    assert fb.result(timeout=30).result.ids[0] == 7
+    assert shapes_a == [(2, 4)] and shapes_b == [(2, 6)]
+    m = eng.metrics()
+    assert m.requests == 3 and m.collections == 2
+    eng.close()
+
+
+def test_collection_routing_errors():
+    eng = BatchingEngine(batch_size=2)
+    with pytest.raises(RuntimeError, match="no collections"):
+        eng.submit(np.zeros(4, np.float32))
+    eng.add_collection("a", _toy_search_fn([]), dim=4)
+    eng.add_collection("b", _toy_search_fn([]), dim=4)
+    with pytest.raises(KeyError, match="'c'"):
+        eng.submit(np.zeros(4, np.float32), collection="c")
+    with pytest.raises(ValueError, match="multiple collections"):
+        eng.submit(np.zeros(4, np.float32))       # ambiguous: no default
+    with pytest.raises(ValueError, match="dim"):
+        eng.submit(np.zeros(5, np.float32), collection="a")
+    with pytest.raises(ValueError, match="already exists"):
+        eng.add_collection("a", _toy_search_fn([]), dim=4)
+    eng.remove_collection("b")
+    assert eng.collections() == ("a",)
+    # one collection left: routing without a name falls back to it
+    fut = eng.submit(np.zeros(4, np.float32))
+    eng.flush()
+    assert fut.result(timeout=30)
+    with pytest.raises(KeyError):
+        eng.remove_collection("b")
+    eng.close()
+
+
+def test_backend_failure_isolated_to_its_group():
+    """A backend exception in one (collection, k-bin, params) group must
+    fail only that group's futures; other groups — same engine, same
+    flush — keep dispatching and resolving, and the engine stays usable."""
+
+    def boom(q, k, params):
+        raise RuntimeError("backend down")
+
+    eng = BatchingEngine(batch_size=2)
+    eng.add_collection("bad", boom, dim=4)
+    eng.add_collection("good", _toy_search_fn([]), dim=4, default_k=3)
+    wide = SearchParams(k=3, beam_width=128)
+    f_bad = [eng.submit(np.zeros(4, np.float32), collection="bad")
+             for _ in range(3)]
+    f_good = [eng.submit(np.full(4, float(i), np.float32), collection="good")
+              for i in range(3)]
+    f_wide = eng.submit(np.full(4, 5.0, np.float32), collection="good",
+                        params=wide)
+    eng.flush()  # dispatches every group, the failing one included
+    for f in f_bad:
+        with pytest.raises(RuntimeError, match="backend down"):
+            f.result(timeout=5)
+    # the good collection's groups resolved despite the sibling failure
+    for i, f in enumerate(f_good):
+        assert f.result(timeout=5).result.ids[0] == i
+    assert f_wide.result(timeout=5).result.ids.shape == (3,)
+    # and the engine keeps dispatching new work afterwards
+    again = eng.submit(np.full(4, 9.0, np.float32), collection="good")
+    eng.flush()
+    assert again.result(timeout=5).result.ids[0] == 9
+    m = eng.metrics()
+    assert m.requests == 5  # failed futures never count as completed
+    eng.close()
+
+
+def test_engine_context_manager_and_idempotent_close():
+    with BatchingEngine(_toy_search_fn([]), dim=4, batch_size=8) as eng:
+        fut = eng.submit(np.zeros(4, np.float32))
+    # __exit__ flushed the ragged batch and closed the engine
+    assert fut.result(timeout=5).batch_size == 1
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(np.zeros(4, np.float32))
+    eng.close()  # second close is a no-op, not an error
+    eng.close()
+
+
+def test_qps_zero_wall_is_zero_not_inf():
+    """EngineMetrics.qps: zero elapsed wall (instantaneous batch, frozen
+    clock) must report 0.0 — `float(done and np.inf)` used to return inf
+    for any nonzero completed count."""
+    eng = BatchingEngine(
+        _toy_search_fn([]), dim=4, batch_size=1, clock=lambda: 42.0
+    )
+    eng.submit(np.zeros(4, np.float32)).result(timeout=30)
+    m = eng.metrics()
+    assert m.requests == 1
+    assert m.qps == 0.0 and np.isfinite(m.qps)
+    eng.close()
+
+
+def test_compile_cache_shared_across_same_geometry_collections():
+    """Two collections whose backends share a compiled identity register
+    one executable: the second collection's dispatches are all hits."""
+    fn = _toy_search_fn([])
+    eng = BatchingEngine(batch_size=2)
+    eng.add_collection("a", fn, dim=4, default_k=3)
+    eng.add_collection("b", fn, dim=4, default_k=3)  # same geometry (same fn)
+    eng.search(np.zeros((2, 4), np.float32), collection="a")
+    m0 = eng.metrics()
+    assert (m0.compile_misses, m0.compile_hits) == (1, 0)
+    eng.search(np.zeros((2, 4), np.float32), collection="b")
+    m1 = eng.metrics()
+    assert m1.compile_misses == 1          # b compiled nothing new
+    assert m1.compile_hits == 1
+    assert m1.compiled_executables == 1
+    # a different params group is its own executable
+    eng.search(np.zeros((2, 4), np.float32), collection="b",
+               params=SearchParams(k=3, beam_width=128))
+    assert eng.metrics().compiled_executables == 2
+    eng.close()
+
+
 # ----------------------------------------------------------- shard_search
 def test_shard_search_parity_on_1device_mesh(index):
     q = jnp.asarray(

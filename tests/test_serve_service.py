@@ -1,0 +1,310 @@
+"""VectorService contracts: named-collection routing on one shared core,
+geometry-keyed compile-cache sharing, database persistence (db.json),
+write forwarding to mutable backends, and lifecycle/context management."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexFormatError,
+    MemoryMode,
+    MutableIndex,
+    PageANNConfig,
+    PageANNIndex,
+    SearchParams,
+)
+from repro.core import persist
+from repro.data.pipeline import clustered_vectors, query_vectors
+from repro.serve import BatchingEngine, VectorService
+from repro.serve.compile_cache import CompileCache, geometry_of
+
+N, D = 600, 32
+
+
+def _cfg(**kw) -> PageANNConfig:
+    base = dict(
+        dim=D, graph_degree=12, build_beam=24, pq_subspaces=8,
+        lsh_sample=256, lsh_entries=8, beam_width=48, max_hops=48,
+        memory_mode=MemoryMode.HYBRID,
+    )
+    base.update(kw)
+    return PageANNConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def corpus_a():
+    return clustered_vectors(N, D, num_clusters=16, seed=0)
+
+
+@pytest.fixture(scope="module")
+def corpus_b():
+    return clustered_vectors(N, D, num_clusters=16, seed=42)
+
+
+@pytest.fixture(scope="module")
+def index_a(corpus_a):
+    return PageANNIndex.build(corpus_a, _cfg())
+
+
+@pytest.fixture(scope="module")
+def index_b(corpus_b):
+    return PageANNIndex.build(corpus_b, _cfg())
+
+
+@pytest.fixture()
+def queries(corpus_a):
+    return query_vectors(corpus_a, 6, seed=3)
+
+
+def _ids(rows):
+    return np.stack([r.result.ids for r in rows])
+
+
+# ---------------------------------------------------------------- routing
+def test_routing_matches_direct_search(index_a, index_b, queries):
+    """Each collection's requests reach ITS index: interleaved submits to
+    two collections demux back to exactly what each index returns
+    directly."""
+    with VectorService(batch_size=4) as svc:
+        svc.create_collection("a", index_a)
+        svc.create_collection("b", index_b)
+        assert svc.list_collections() == ("a", "b")
+        futs = [
+            svc.submit("a" if i % 2 == 0 else "b", q, k=5)
+            for i, q in enumerate(queries)
+        ]
+        svc.flush()
+        rows = [f.result(timeout=120) for f in futs]
+    want_a = index_a.search(queries[0::2], k=5)
+    want_b = index_b.search(queries[1::2], k=5)
+    np.testing.assert_array_equal(_ids(rows[0::2]), want_a.ids)
+    np.testing.assert_array_equal(_ids(rows[1::2]), want_b.ids)
+
+
+def test_bit_identical_to_independent_engines(index_a, index_b, queries):
+    """Acceptance: two same-geometry collections behind ONE VectorService
+    return results bit-identical to two independent BatchingEngine
+    .from_index instances, while the second collection's warm groups
+    compile zero new executables."""
+    with VectorService(batch_size=4) as svc:
+        svc.create_collection("a", index_a, k=5)
+        rows_a = svc.search("a", queries)
+        m_after_a = svc.metrics()
+        svc.create_collection("b", index_b, k=5)
+        rows_b = svc.search("b", queries)
+        m_after_b = svc.metrics()
+
+    with BatchingEngine.from_index(index_a, k=5, batch_size=4) as eng_a:
+        solo_a = eng_a.search(queries)
+    with BatchingEngine.from_index(index_b, k=5, batch_size=4) as eng_b:
+        solo_b = eng_b.search(queries)
+
+    for rows, solo in ((rows_a, solo_a), (rows_b, solo_b)):
+        for field in ("ids", "dists", "ios", "hops", "cache_hits"):
+            got = np.stack([np.asarray(getattr(r.result, field)) for r in rows])
+            want = np.stack(
+                [np.asarray(getattr(r.result, field)) for r in solo]
+            )
+            np.testing.assert_array_equal(got, want, err_msg=field)
+
+    # the shared compile cache: collection b's dispatches re-used a's
+    # executable (same geometry) — zero new compiles, all hits
+    assert m_after_a.compile_misses > 0
+    assert m_after_b.compile_misses == m_after_a.compile_misses
+    assert m_after_b.compiled_executables == m_after_a.compiled_executables
+    assert m_after_b.compile_hits > m_after_a.compile_hits
+
+
+def test_same_geometry_keys_equal_distinct_differ(index_a, index_b, corpus_a):
+    ga, gb = geometry_of(index_a), geometry_of(index_b)
+    assert ga == gb  # same cfg + corpus size -> same compiled geometry
+    small = PageANNIndex.build(corpus_a[:300], _cfg())
+    assert geometry_of(small) != ga  # fewer pages -> its own executables
+
+
+def test_create_from_config_builds(corpus_a, queries):
+    with VectorService(batch_size=4) as svc:
+        handle = svc.create_collection("built", _cfg(), corpus_a, k=5)
+        rows = handle.search(queries)
+        assert _ids(rows).shape == (len(queries), 5)
+    with pytest.raises(ValueError, match="needs vectors"):
+        VectorService().create_collection("x", _cfg())
+
+
+def test_handles_and_registry(index_a):
+    svc = VectorService(batch_size=2)
+    h = svc.create_collection("a", index_a)
+    assert h.name == "a" and h.index is index_a
+    assert svc.collection("a").index is index_a
+    assert "a" in svc and len(svc) == 1 and list(svc) == ["a"]
+    with pytest.raises(KeyError):
+        svc.collection("nope")
+    with pytest.raises(ValueError, match="already exists"):
+        svc.create_collection("a", index_a)
+    with pytest.raises(TypeError, match="VectorIndex"):
+        svc.create_collection("bad", object())
+    svc.close()
+
+
+@pytest.mark.parametrize(
+    "name", ["", "-x", ".hidden", "a/b", "a b", "x" * 65, 7]
+)
+def test_invalid_collection_names(index_a, name):
+    with VectorService() as svc:
+        with pytest.raises(ValueError, match="collection name"):
+            svc.create_collection(name, index_a)
+
+
+def test_drop_dispatches_pending_then_unroutes(index_a, index_b, queries):
+    with VectorService(batch_size=64) as svc:  # big batch: stays pending
+        svc.create_collection("a", index_a, k=4)
+        svc.create_collection("b", index_b, k=4)
+        fut = svc.submit("a", queries[0])
+        svc.drop("a")
+        # the pending request was dispatched (padded), not abandoned
+        np.testing.assert_array_equal(
+            fut.result(timeout=120).result.ids,
+            index_a.search(queries[:1], k=4).ids[0],
+        )
+        assert svc.list_collections() == ("b",)
+        with pytest.raises(KeyError):
+            svc.submit("a", queries[0])
+        with pytest.raises(KeyError):
+            svc.drop("a")
+        # the survivor keeps serving
+        assert _ids(svc.search("b", queries[:2])).shape == (2, 4)
+
+
+def test_writes_route_to_mutable_collection(index_a, index_b, queries):
+    with VectorService(batch_size=4) as svc:
+        svc.create_collection("frozen", index_a, k=3)
+        svc.create_collection("mut", MutableIndex(index_b), k=3)
+        new_ids = svc.insert("mut", queries[:2])
+        assert new_ids.shape == (2,)
+        # the inserted vectors are immediately retrievable — and only
+        # through the mutable collection
+        rows = svc.search("mut", queries[:2], k=1)
+        np.testing.assert_array_equal(_ids(rows)[:, 0], new_ids)
+        assert svc.delete("mut", new_ids) == 2
+        with pytest.raises(RuntimeError, match="insert"):
+            svc.insert("frozen", queries[:1])
+        with pytest.raises(RuntimeError, match="delete"):
+            svc.delete("frozen", [0])
+        with pytest.raises(RuntimeError, match="compact"):
+            svc.compact("frozen")
+        m = svc.metrics()
+        assert m.inserts == 2 and m.deletes == 2
+
+
+# ------------------------------------------------------------- persistence
+def test_database_round_trip(tmp_path, index_a, index_b, queries):
+    db = str(tmp_path / "db")
+    with VectorService(batch_size=4) as svc:
+        svc.create_collection("alpha", index_a, k=5)
+        svc.create_collection("beta", MutableIndex(index_b), k=5)
+        svc.insert("beta", queries[:1])  # dirty state must round-trip too
+        want_a = _ids(svc.search("alpha", queries))
+        want_b = _ids(svc.search("beta", queries))
+        svc.save(db)
+
+    assert persist.is_database_dir(db)
+    doc = persist.read_db_manifest(db)
+    assert sorted(doc["collections"]) == ["alpha", "beta"]
+
+    with VectorService.load(db, batch_size=4) as svc2:
+        assert svc2.list_collections() == ("alpha", "beta")
+        assert isinstance(svc2.collection("beta").index, MutableIndex)
+        np.testing.assert_array_equal(
+            _ids(svc2.search("alpha", queries, k=5)), want_a
+        )
+        np.testing.assert_array_equal(
+            _ids(svc2.search("beta", queries, k=5)), want_b
+        )
+
+
+def test_attach_registers_saved_artifact(tmp_path, index_a, queries):
+    art = str(tmp_path / "idx")
+    index_a.save(art)
+    with VectorService(batch_size=4) as svc:
+        svc.attach("fromdisk", art, k=5)
+        got = _ids(svc.search("fromdisk", queries))
+    np.testing.assert_array_equal(got, index_a.search(queries, k=5).ids)
+
+
+def test_db_manifest_format_errors(tmp_path, index_a):
+    db = str(tmp_path / "db")
+    persist.save_database({"only": index_a}, db)
+    path = os.path.join(db, persist.DB_MANIFEST)
+
+    with open(path) as f:
+        doc = json.load(f)
+    doc["version"] = persist.DB_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(IndexFormatError, match="upgrade"):
+        persist.load_database(db)
+
+    with open(path, "w") as f:
+        f.write("{ not json")
+    with pytest.raises(IndexFormatError, match="not valid JSON"):
+        persist.load_database(db)
+
+    os.remove(path)
+    with pytest.raises(FileNotFoundError):
+        persist.load_database(db)
+    assert not persist.is_database_dir(db)
+
+
+def test_db_manifest_rejects_tampered_paths(tmp_path, index_a):
+    """Artifact paths come from validated names, never manifest values:
+    a db.json steering a collection outside collections/ is refused."""
+    db = str(tmp_path / "db")
+    persist.save_database({"ok": index_a}, db)
+    path = os.path.join(db, persist.DB_MANIFEST)
+    with open(path) as f:
+        doc = json.load(f)
+    doc["collections"]["ok"] = "../../somewhere/else"
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(IndexFormatError, match="unexpected path"):
+        persist.load_database(db)
+
+
+def test_db_manifest_rejects_wrong_format(tmp_path, index_a):
+    # an index directory is not a database directory, and vice versa
+    art = str(tmp_path / "idx")
+    index_a.save(art)
+    with open(os.path.join(art, persist.DB_MANIFEST), "w") as f:
+        json.dump(dict(format="something.else", version=1, collections={}), f)
+    with pytest.raises(IndexFormatError, match="not a repro.vector_database"):
+        persist.read_db_manifest(art)
+
+
+# -------------------------------------------------------------- lifecycle
+def test_context_manager_and_idempotent_close(index_a):
+    with VectorService(batch_size=2) as svc:
+        svc.create_collection("a", index_a)
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.create_collection("b", index_a)
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit("a", np.zeros(D, np.float32))
+    svc.close()  # idempotent
+    svc.close()
+
+
+def test_explicit_shared_compile_cache(index_a, index_b, queries):
+    """Two SERVICES handed the same CompileCache share warm executables —
+    the cache is process-scoped state, not service-private."""
+    cache = CompileCache()
+    with VectorService(batch_size=4, compile_cache=cache) as s1:
+        s1.create_collection("a", index_a, k=5)
+        s1.search("a", queries)
+    misses_after_s1 = cache.stats().misses
+    assert misses_after_s1 > 0
+    with VectorService(batch_size=4, compile_cache=cache) as s2:
+        s2.create_collection("b", index_b, k=5)
+        s2.search("b", queries)
+    assert cache.stats().misses == misses_after_s1
+    assert cache.stats().hits > 0
