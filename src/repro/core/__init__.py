@@ -1,6 +1,7 @@
 """PageANN core: the paper's contribution as composable JAX modules."""
 from repro.core.config import (
     DeltaParams,
+    MemoryBudget,
     MemoryMode,
     PageANNConfig,
     SearchParams,
@@ -14,6 +15,7 @@ __all__ = [
     "DeltaParams",
     "DeltaTier",
     "IndexFormatError",
+    "MemoryBudget",
     "MemoryMode",
     "MutableIndex",
     "MutableVectorIndex",

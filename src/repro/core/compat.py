@@ -1,17 +1,55 @@
-"""Version-portable wrappers over the jax sharding API.
+"""Version-portable wrappers over moving jax API surfaces.
 
 The mesh/shard_map surface moved between jax releases: ``shard_map`` lived
 in ``jax.experimental.shard_map`` (with a ``check_rep`` flag) before being
 promoted to ``jax.shard_map`` (flag renamed ``check_vma``), and
-``jax.make_mesh`` only grew ``axis_types`` after 0.4.x. Everything in this
-repo that touches a mesh goes through these two functions so the same code
-lowers on both the pinned CI jax and newer TPU toolchains.
+``jax.make_mesh`` only grew ``axis_types`` after 0.4.x. Likewise
+``jax.pure_callback`` batching moved from the boolean ``vectorized=`` flag
+to the ``vmap_method=`` enum. Everything in this repo that touches these
+surfaces goes through here so the same code lowers on both the pinned CI
+jax and newer TPU toolchains.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable
 
 import jax
+
+
+@functools.cache
+def _callback_batch_kwargs() -> dict:
+    """How this jax spells "the callback handles batched args itself".
+
+    ``vmap_method="expand_dims"`` (new spelling) and ``vectorized=True``
+    (old spelling) agree for callbacks whose every argument is mapped: the
+    host function is invoked ONCE per batched call with a leading batch
+    axis on each argument and must return results with the same leading
+    axis — exactly what the streaming page fetcher wants (one host
+    round-trip per hop for the whole vmapped query batch, not one per
+    query).
+    """
+    import inspect
+
+    try:
+        params = inspect.signature(jax.pure_callback).parameters
+    except (TypeError, ValueError):
+        return {"vectorized": True}
+    if "vmap_method" in params:
+        return {"vmap_method": "expand_dims"}
+    return {"vectorized": True}
+
+
+def pure_callback_batched(callback: Callable, result_shape_dtypes, *args):
+    """``jax.pure_callback`` that batches under vmap with one host call.
+
+    ``callback`` must accept arguments with arbitrary leading batch axes
+    and return arrays with those axes prepended to the declared result
+    shapes.
+    """
+    return jax.pure_callback(
+        callback, result_shape_dtypes, *args, **_callback_batch_kwargs()
+    )
 
 
 def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:

@@ -88,6 +88,103 @@ def resolve_search_params(
     return p
 
 
+_UNIT_BYTES = {
+    "B": 1,
+    "KB": 10**3, "MB": 10**6, "GB": 10**9, "TB": 10**12,
+    "KIB": 2**10, "MIB": 2**20, "GIB": 2**30, "TIB": 2**40,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryBudget:
+    """Device-memory budget for the resident page region at load time.
+
+    Exactly one of ``bytes`` (absolute budget for resident page records)
+    or ``fraction`` (of the artifact's page file) must be set. Passing
+    ``memory_budget=None`` to the load surface means "no budget": the whole
+    page file is materialized on device, exactly today's behavior. A budget
+    caps how many packed page records are pinned resident (chosen hottest
+    first by the artifact's recorded access order); every other page is
+    streamed from the host memmap per hop through the staging path.
+
+    Frozen and hashable so a budget can ride static jit closures and be
+    serialized losslessly into the artifact manifest (``to_json`` /
+    ``from_json`` — the ``residency`` section).
+    """
+
+    bytes: int | None = None
+    fraction: float | None = None
+
+    def __post_init__(self):
+        if (self.bytes is None) == (self.fraction is None):
+            raise ValueError(
+                "MemoryBudget needs exactly one of bytes= or fraction="
+            )
+        if self.bytes is not None:
+            if not isinstance(self.bytes, int) or isinstance(self.bytes, bool):
+                raise ValueError("MemoryBudget.bytes must be an int")
+            if self.bytes <= 0:
+                raise ValueError("MemoryBudget.bytes must be positive")
+        if self.fraction is not None:
+            if not 0.0 < float(self.fraction) <= 1.0:
+                raise ValueError(
+                    "MemoryBudget.fraction must be in (0, 1]"
+                )
+            object.__setattr__(self, "fraction", float(self.fraction))
+
+    def resolve_pages(self, num_pages: int, page_bytes: int) -> int:
+        """How many page records fit this budget: at least 1 (the search
+        needs a non-empty resident array), at most every page."""
+        if self.bytes is not None:
+            fit = self.bytes // max(1, page_bytes)
+        else:
+            fit = int(num_pages * self.fraction)
+        return max(1, min(int(num_pages), int(fit)))
+
+    def to_json(self) -> dict:
+        return {"bytes": self.bytes, "fraction": self.fraction}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "MemoryBudget":
+        return cls(bytes=doc.get("bytes"), fraction=doc.get("fraction"))
+
+    @classmethod
+    def parse(cls, spec: "str | int | float | MemoryBudget") -> "MemoryBudget":
+        """Parse a CLI-style budget: ``"512MB"`` / ``"1GiB"`` / a byte
+        count, or a bare number in (0, 1] meaning a fraction of the page
+        file (``"0.25"``)."""
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, bool):
+            raise ValueError(f"cannot parse memory budget from {spec!r}")
+        if isinstance(spec, int):
+            return cls(bytes=spec)
+        if isinstance(spec, float):
+            return cls(fraction=spec)
+        s = str(spec).strip()
+        unit = ""
+        num = s
+        for i, c in enumerate(s):
+            if c.isalpha():
+                num, unit = s[:i], s[i:]
+                break
+        try:
+            value = float(num)
+        except ValueError:
+            raise ValueError(f"cannot parse memory budget {spec!r}") from None
+        if unit:
+            mult = _UNIT_BYTES.get(unit.strip().upper())
+            if mult is None:
+                raise ValueError(
+                    f"unknown memory budget unit {unit!r} in {spec!r} "
+                    f"(use one of {sorted(_UNIT_BYTES)})"
+                )
+            return cls(bytes=int(value * mult))
+        if value <= 1.0 and "." in num:
+            return cls(fraction=value)
+        return cls(bytes=int(value))
+
+
 @dataclasses.dataclass(frozen=True)
 class DeltaParams:
     """Knobs of the mutable-index delta tier (``repro.core.delta``).

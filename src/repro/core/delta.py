@@ -543,7 +543,18 @@ class MutableIndex:
             self._directory = directory
 
     @classmethod
-    def load(cls, directory: str) -> "MutableIndex":
+    def load(cls, directory: str, *, memory_budget=None) -> "MutableIndex":
+        """``memory_budget`` caps the frozen base tier's device-resident
+        page region (see :meth:`PageANNIndex.load`); the delta tier is
+        in-memory by construction."""
         from repro.core import persist
 
-        return persist.load_mutable(directory)
+        return persist.load_mutable(directory, memory_budget=memory_budget)
+
+    def fetch_stats(self) -> dict:
+        """Streaming-tier counters of the frozen base (zeros when the base
+        is fully resident or has no streaming tier)."""
+        fn = getattr(self._state.base, "fetch_stats", None)
+        if fn is None:
+            return dict(pages_fetched=0, fetch_hits=0, fetch_wall_s=0.0)
+        return fn()

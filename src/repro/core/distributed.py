@@ -72,6 +72,9 @@ def build_sharded_index(
             member_count=padp(d.member_count, 0),
             nbr_ids=padp(d.nbr_ids, PAD),
             nbr_count=padp(d.nbr_count, 0),
+            # sharded shards are always fully resident: identity residency
+            # over the padded page axis (pad pages map to their zero recs)
+            resident_map=jnp.arange(max_pages, dtype=jnp.int32),
         )
 
     datas = [pad_pages(i.data, i.store.num_pages) for i in idxs]

@@ -58,6 +58,13 @@ class BuildStats:
     # occupies, not a recomputation from device arrays. Defaults to 0 for
     # manifests written before the field existed.
     disk_bytes: int = 0
+    # resident/streamed split of the disk tier on device: how many page
+    # records are pinned in device memory and their byte footprint. Equal
+    # to pages/disk_bytes when fully resident; smaller under a
+    # ``MemoryBudget`` load, where the remainder streams from the pages.bin
+    # memmap per hop. Default 0 for manifests written before streaming.
+    resident_pages: int = 0
+    resident_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -68,6 +75,13 @@ class PageANNIndex:
     lsh: lsh_mod.LSHIndex
     data: search_mod.SearchData
     stats: BuildStats
+    # streaming page tier (set by a ``MemoryBudget`` load, None otherwise):
+    # the host-side per-hop reader over the pages.bin memmap
+    fetcher: object | None = None
+    # full residency priority, hottest page first (warm_cache access
+    # counts); persisted so a budgeted load pins the right pages
+    page_order: np.ndarray | None = None
+    memory_budget: object | None = None
 
     # ------------------------------------------------------------------ build
     @staticmethod
@@ -153,6 +167,8 @@ class PageANNIndex:
                 padded_tile_bytes=store.padded_tile_bytes(),
                 memory_bytes=tier.memory_bytes + lsh.memory_bytes,
                 disk_bytes=store.num_pages * store.padded_tile_bytes(),
+                resident_pages=store.num_pages,
+                resident_bytes=store.num_pages * store.padded_tile_bytes(),
             ),
         )
         if warmup_queries is not None and cfg.cache_pages > 0:
@@ -176,13 +192,23 @@ class PageANNIndex:
 
     # ------------------------------------------------------------------ cache
     def warm_cache(self, queries: np.ndarray, params: SearchParams | None = None) -> None:
-        """Sec 4.3: run a warm-up batch, cache the hottest pages."""
+        """Sec 4.3: run a warm-up batch, cache the hottest pages.
+
+        Also records the FULL access ordering over all pages as
+        ``page_order`` (accessed pages by descending count, then the never-
+        accessed rest in id order) — the residency policy a budgeted
+        ``load(..., memory_budget=...)`` pins pages by."""
         p = self.resolve_params(None, params)
         res = self._raw_search(jnp.asarray(queries, jnp.float32), p)
         pages = np.asarray(res.ids) // self.store.capacity
         pages = pages[np.asarray(res.ids) >= 0]
         uniq, counts = np.unique(pages, return_counts=True)
-        hot = uniq[np.argsort(-counts)][: self.cfg.cache_pages]
+        by_heat = uniq[np.argsort(-counts)].astype(np.int32)
+        hot = by_heat[: self.cfg.cache_pages]
+        cold = np.setdiff1d(
+            np.arange(self.store.num_pages, dtype=np.int32), by_heat
+        )
+        self.page_order = np.concatenate([by_heat, cold])
         self.tier = dataclasses.replace(
             self.tier, cached_pages=jnp.asarray(np.sort(hot).astype(np.int32))
         )
@@ -193,17 +219,37 @@ class PageANNIndex:
         self, q: jnp.ndarray, params: SearchParams, mesh=None
     ) -> search_mod.SearchResult:
         if mesh is not None:
+            if self.fetcher is not None:
+                raise ValueError(
+                    "sharded search over a streamed (memory-budgeted) index "
+                    "is not supported: reload without memory_budget to "
+                    "search across a mesh"
+                )
             return search_mod.shard_search(
                 q, self.data, params,
                 mesh=mesh,
                 capacity=self.store.capacity,
                 mode=self.cfg.memory_mode.value,
             )
+        if self.fetcher is not None:
+            return search_mod.stream_search(
+                q, self.data, params,
+                capacity=self.store.capacity,
+                mode=self.cfg.memory_mode.value,
+                fetcher=self.fetcher,
+            )
         return search_mod.batch_search(
             q, self.data, params,
             capacity=self.store.capacity,
             mode=self.cfg.memory_mode.value,
         )
+
+    def fetch_stats(self) -> dict:
+        """Streaming-tier counters (``pages_fetched`` / ``fetch_hits`` /
+        ``fetch_wall_s``); zeros when fully resident."""
+        if self.fetcher is None:
+            return dict(pages_fetched=0, fetch_hits=0, fetch_wall_s=0.0)
+        return self.fetcher.fetch_stats()
 
     def vectors_by_original_id(self) -> np.ndarray:
         """Member vectors in ORIGINAL id order: the inverse of the build's
@@ -257,11 +303,16 @@ class PageANNIndex:
         persist.save_pageann(self, directory)
 
     @classmethod
-    def load(cls, directory: str) -> "PageANNIndex":
-        """Reload a saved index; searches are bit-identical to the original."""
+    def load(cls, directory: str, *, memory_budget=None) -> "PageANNIndex":
+        """Reload a saved index; searches are bit-identical to the original.
+
+        ``memory_budget`` (``repro.core.MemoryBudget`` | bytes | fraction |
+        spec string | None) caps the device-resident page-record region;
+        pages beyond it stream from the ``pages.bin`` memmap per hop with
+        no change to search results. ``None`` = fully resident."""
         from repro.core import persist
 
-        return persist.load_pageann(directory)
+        return persist.load_pageann(directory, memory_budget=memory_budget)
 
 
 def recall_at_k(found_ids: np.ndarray, truth_ids: np.ndarray) -> float:

@@ -54,16 +54,32 @@ class PageStore:
     nbr_ids: jnp.ndarray     # (P, R_p) int32, REASSIGNED vector ids, PAD=-1
     nbr_codes: np.ndarray    # (P, R_p, M_disk) uint8 — unpacked codes (host)
     nbr_count: jnp.ndarray   # (P,) int32
-    recs: jnp.ndarray        # (P, rows, 128) f32 — packed page records
+    recs: jnp.ndarray        # (R, rows, 128) f32 — packed page records on
+                             # device; R == P fully resident, R < P streamed
     capacity: int
     dim: int
     # id reassignment maps (host-side numpy; not used on the search path)
     new_to_old: np.ndarray   # (N,)
     old_to_new: np.ndarray   # (N,)
+    # streaming tier (None => fully resident, ``recs`` holds every page):
+    # resident_map[p] is the row of ``recs`` holding page p, or -1 if page p
+    # is served from the host memmap (``recs_host``) per hop
+    resident_map: jnp.ndarray | None = None   # (P,) int32
+    recs_host: np.ndarray | None = None       # (P, rows, 128) f32 memmap
 
     @property
     def num_pages(self) -> int:
         return int(self.vecs.shape[0])
+
+    @property
+    def resident_pages(self) -> int:
+        """Pages pinned on device (== num_pages when fully resident)."""
+        return int(self.recs.shape[0])
+
+    @property
+    def resident_bytes(self) -> int:
+        """Device footprint of the pinned page-record region."""
+        return int(self.recs.shape[0]) * self.padded_tile_bytes()
 
     @property
     def num_vectors(self) -> int:

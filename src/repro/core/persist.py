@@ -166,7 +166,10 @@ def save_pageann(index, directory: str) -> None:
     os.makedirs(directory, exist_ok=True)
     store, tier, lsh = index.store, index.tier, index.lsh
 
-    recs = np.ascontiguousarray(np.asarray(store.recs, np.float32))
+    # a streamed store's device ``recs`` holds only the resident subset;
+    # the host memmap is the full page file and the source of truth
+    recs_full = store.recs_host if store.recs_host is not None else store.recs
+    recs = np.ascontiguousarray(np.asarray(recs_full, np.float32))
     recs.tofile(os.path.join(directory, PAGES_BIN))
 
     sidecars = {}
@@ -174,6 +177,11 @@ def save_pageann(index, directory: str) -> None:
         # MEM_ALL records carry no code rows, so the host-side codes view
         # is not recoverable from pages.bin — persist it explicitly
         sidecars["nbr_codes"] = np.asarray(store.nbr_codes)
+    page_order = getattr(index, "page_order", None)
+    if page_order is not None:
+        # full hotness ordering (warm_cache access counts, hottest first):
+        # the residency policy a budgeted load pins pages by
+        sidecars["page_order"] = np.asarray(page_order, np.int32)
     np.savez(
         os.path.join(directory, ARRAYS_NPZ),
         **sidecars,
@@ -209,13 +217,48 @@ def save_pageann(index, directory: str) -> None:
             # warm-cache persistence: the hot page ids ride the manifest so
             # a loaded server starts with the builder's warmed cache
             hot_pages=np.asarray(tier.cached_pages).tolist(),
+            # residency metadata: how THIS index was loaded/built. The
+            # budget round-trips so a re-saved streamed index records its
+            # provenance; a fresh load still chooses its own budget.
+            residency=dict(
+                memory_budget=(
+                    index.memory_budget.to_json()
+                    if getattr(index, "memory_budget", None) is not None
+                    else None
+                ),
+                resident_pages=store.resident_pages,
+                total_pages=pages,
+            ),
         ),
     )
 
 
-def load_pageann(directory: str):
+def _page_order_of(doc: dict, arrays: dict) -> np.ndarray:
+    """Full residency priority, hottest page first: the persisted
+    ``page_order`` sidecar (warm_cache access counts) when the artifact
+    carries one, else the manifest's hot pages followed by the rest in id
+    order — a valid (if unmeasured) policy for pre-streaming artifacts."""
+    pages = int(doc["pages"])
+    if "page_order" in arrays:
+        return np.asarray(arrays["page_order"], np.int32)
+    hot = np.asarray(doc.get("hot_pages", []), np.int32)
+    rest = np.setdiff1d(np.arange(pages, dtype=np.int32), hot)
+    return np.concatenate([hot, rest])[:pages]
+
+
+def load_pageann(directory: str, *, memory_budget=None):
     """Reload a saved index; search results are bit-identical to the
-    in-memory index that was saved."""
+    in-memory index that was saved.
+
+    ``memory_budget`` (a :class:`repro.core.config.MemoryBudget`, or None)
+    caps the device-resident page-record region: the hottest pages that fit
+    are pinned on device, every other page stays in the ``pages.bin``
+    memmap and is fetched per hop through a :class:`core.stream.PageFetcher`
+    host callback. Results stay bit-identical to a fully resident load —
+    only where the record bytes are gathered from changes. ``None`` (the
+    default) is always fully resident, today's behavior."""
+    from repro.core import stream as stream_mod
+    from repro.core.config import MemoryBudget
     from repro.core.index import BuildStats, PageANNIndex
 
     doc = read_manifest(directory)
@@ -241,6 +284,34 @@ def load_pageann(directory: str):
             recs_mm, doc["capacity"], doc["dim"],
             rp=arrays["nbr_ids"].shape[1], m=cfg.pq_subspaces,
         )
+
+    page_order = _page_order_of(doc, arrays)
+    num_pages = int(doc["pages"])
+    fetcher = None
+    if memory_budget is not None:
+        memory_budget = MemoryBudget.parse(memory_budget)
+        n_res = memory_budget.resolve_pages(
+            num_pages, int(doc["page_record_bytes"])
+        )
+    else:
+        n_res = num_pages
+    if n_res >= num_pages:
+        # everything fits: plain fully resident load (identity residency,
+        # no fetcher) — shares compiled executables with unbudgeted loads
+        resident_map = None
+        recs_dev = jnp.asarray(recs_mm)
+        recs_host = None
+    else:
+        # pin the hottest pages that fit; sort the kept ids so the device
+        # region preserves relative page order (gather locality)
+        resident_ids = np.sort(page_order[:n_res])
+        rmap = np.full(num_pages, stream_mod.PAD, np.int32)
+        rmap[resident_ids] = np.arange(n_res, dtype=np.int32)
+        resident_map = jnp.asarray(rmap)
+        recs_dev = jnp.asarray(np.asarray(recs_mm[resident_ids], np.float32))
+        recs_host = recs_mm
+        fetcher = stream_mod.PageFetcher(recs_mm)
+
     store = layout_mod.PageStore(
         vecs=layout_mod.unpack_member_vectors(
             recs_mm, doc["capacity"], doc["dim"]
@@ -249,11 +320,13 @@ def load_pageann(directory: str):
         nbr_ids=jnp.asarray(arrays["nbr_ids"]),
         nbr_codes=nbr_codes,
         nbr_count=jnp.asarray(arrays["nbr_count"]),
-        recs=jnp.asarray(recs_mm),
+        recs=recs_dev,
         capacity=doc["capacity"],
         dim=doc["dim"],
         new_to_old=arrays["new_to_old"],
         old_to_new=arrays["old_to_new"],
+        resident_map=resident_map,
+        recs_host=recs_host,
     )
     # warm-cache persistence: the manifest's hot page ids pre-populate the
     # cache so a restarted server serves the first query warm (the npz copy
@@ -278,6 +351,8 @@ def load_pageann(directory: str):
     # not a recomputation from device arrays (see BuildStats docstring)
     stats = BuildStats(**doc["stats"])
     stats.disk_bytes = os.path.getsize(pages_path)
+    stats.resident_pages = store.resident_pages
+    stats.resident_bytes = store.resident_bytes
     return PageANNIndex(
         cfg=cfg,
         store=store,
@@ -285,6 +360,9 @@ def load_pageann(directory: str):
         lsh=lsh,
         data=search_mod.make_search_data(store, tier, lsh),
         stats=stats,
+        fetcher=fetcher,
+        page_order=page_order,
+        memory_budget=memory_budget,
     )
 
 
@@ -351,9 +429,11 @@ def swap_mutable(state, directory: str) -> None:
     shutil.rmtree(old)
 
 
-def load_mutable(directory: str):
+def load_mutable(directory: str, *, memory_budget=None):
     """Reload a saved mutable index (base + delta sidecar); searches on
-    the loaded index are bit-identical to the saved dirty state."""
+    the loaded index are bit-identical to the saved dirty state.
+    ``memory_budget`` applies to the frozen base tier (the delta tier is
+    in-memory by construction)."""
     from repro.core.delta import MutableIndex
 
     doc = read_manifest(directory)
@@ -361,7 +441,9 @@ def load_mutable(directory: str):
         raise ValueError(
             f"{directory}: kind={doc['kind']!r}, not a mutable index"
         )
-    base = load_index(os.path.join(directory, BASE_SUBDIR))
+    base = load_index(
+        os.path.join(directory, BASE_SUBDIR), memory_budget=memory_budget
+    )
     npz_path = os.path.join(directory, DELTA_NPZ)
     if not os.path.isfile(npz_path):
         raise IndexFormatError(f"{npz_path}: missing delta sidecar")
@@ -474,11 +556,12 @@ def save_database(collections, directory: str) -> None:
     os.replace(tmp, path)
 
 
-def load_database(directory: str) -> dict:
+def load_database(directory: str, *, memory_budget=None) -> dict:
     """Reload every collection of a saved database: name -> loaded
     ``VectorIndex`` (each dispatched through :func:`load_index` on its
     manifest kind). Searches on the loaded indexes are bit-identical to
-    the saved ones.
+    the saved ones. ``memory_budget`` applies PER COLLECTION (each
+    collection's page tier is capped independently).
 
     Artifact paths are derived from the VALIDATED collection names, never
     from manifest values: a tampered ``db.json`` mapping a name outside
@@ -494,21 +577,33 @@ def load_database(directory: str) -> dict:
                 f"path {sub!r} (expected {want!r})"
             )
         out[name] = load_index(
-            os.path.join(directory, DB_COLLECTIONS_SUBDIR, name)
+            os.path.join(directory, DB_COLLECTIONS_SUBDIR, name),
+            memory_budget=memory_budget,
         )
     return out
 
 
 # ----------------------------------------------------------------- dispatch
-def load_index(directory: str):
-    """Load whichever :class:`VectorIndex` implementation saved ``directory``."""
+def load_index(directory: str, *, memory_budget=None):
+    """Load whichever :class:`VectorIndex` implementation saved ``directory``.
+
+    ``memory_budget`` (``MemoryBudget`` | bytes | fraction | spec string |
+    None) caps the device-resident page region of indexes with a page tier
+    (PageANN, and the base tier of a mutable index); ``None`` keeps
+    everything resident. Baseline kinds have no page tier and reject a
+    budget loudly rather than silently ignoring it."""
     from repro.core import baselines as bl
 
     kind = read_manifest(directory)["kind"]
     if kind == "pageann":
-        return load_pageann(directory)
+        return load_pageann(directory, memory_budget=memory_budget)
     if kind == "mutable":
-        return load_mutable(directory)
+        return load_mutable(directory, memory_budget=memory_budget)
     if kind in bl.BASELINE_KINDS:
+        if memory_budget is not None:
+            raise ValueError(
+                f"{directory}: kind={kind!r} baseline indexes are fully "
+                "in-memory; memory_budget is not supported"
+            )
         return bl.load_baseline(directory)
     raise ValueError(f"{directory}: unknown index kind {kind!r}")

@@ -17,11 +17,17 @@ per-collection artifacts):
     vector ids and the paper's I/O accounting.
   * ``save(directory)`` — persist the index artifact to disk.
   * ``load(directory)`` (classmethod) — reload it; searches on the loaded
-    index are bit-identical to the saved one.
+    index are bit-identical to the saved one. Implementations with a page
+    tier additionally accept ``load(directory, memory_budget=...)`` (a
+    :class:`repro.core.config.MemoryBudget`): the hottest pages that fit
+    are pinned on device and the rest stream from the ``pages.bin`` memmap
+    per hop — same results, bounded device footprint.
   * ``stats`` — build/footprint statistics object. Disk footprint numbers
     describe the artifact as persisted: an index loaded via memmap reports
     the actual on-disk byte size of its page file
     (``BuildStats.disk_bytes``), not a recomputation from device arrays.
+    The resident/streamed split rides the same object —
+    ``resident_pages`` / ``resident_bytes`` vs ``disk_bytes``.
   * ``dim`` — vector dimensionality accepted by ``search``.
 
 :class:`MutableVectorIndex` extends the contract with writes —

@@ -61,11 +61,16 @@ class SearchData(NamedTuple):
     """All device arrays the search touches (a single pytree argument)."""
 
     # disk tier: packed page records (members + neighbor codes + counts in
-    # one (rows, 128) tile per page — see core.layout.pack_page_records)
-    page_recs: jnp.ndarray     # (P, rows, 128) f32
+    # one (rows, 128) tile per page — see core.layout.pack_page_records).
+    # Under a MemoryBudget, page_recs holds only the RESIDENT subset
+    # (R <= P rows) and resident_map routes each logical page id to its
+    # resident slot (-1 = streamed from the host memmap per hop); fully
+    # resident indexes carry resident_map == arange(P) with R == P.
+    page_recs: jnp.ndarray     # (R, rows, 128) f32
     member_count: jnp.ndarray  # (P,)
     nbr_ids: jnp.ndarray       # (P, Rp)
     nbr_count: jnp.ndarray     # (P,)
+    resident_map: jnp.ndarray  # (P,) int32: slot into page_recs, or -1
     # memory tier
     mem_codes: jnp.ndarray     # (N_pad, M_mem)
     mem_mask: jnp.ndarray      # (N_pad,)
@@ -80,11 +85,16 @@ class SearchData(NamedTuple):
 
 
 def make_search_data(store: PageStore, tier: MemoryTier, lsh: LSHIndex) -> SearchData:
+    resident_map = store.resident_map
+    if resident_map is None:
+        # fully resident: the identity routing (page id == resident slot)
+        resident_map = jnp.arange(store.recs.shape[0], dtype=jnp.int32)
     return SearchData(
         page_recs=store.recs,
         member_count=store.member_count,
         nbr_ids=store.nbr_ids,
         nbr_count=store.nbr_count,
+        resident_map=resident_map,
         mem_codes=tier.mem_codes,
         mem_mask=tier.mem_mask,
         mem_codebooks=tier.mem_codebooks,
@@ -158,7 +168,7 @@ def init_state(
     entries: int,
 ) -> BeamState:
     """In-memory routing (Alg. 2 line 4, Fig. 6 step 1): LSH entry points."""
-    num_pages = data.page_recs.shape[0]
+    num_pages = data.resident_map.shape[0]
     qcode = hash_codes(q[None], data.lsh_planes)[0]
     ham = ops.hamming(data.lsh_codes, qcode)
     _, top = _top_k_merge(ham.astype(jnp.float32), entries)
@@ -258,6 +268,7 @@ def score_page_batch(
     *,
     capacity: int,
     mode: str,
+    fetch=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Batched page-record read (Fig. 6 steps 2-4, THE I/O) -> both score
     sets from one DMA per page.
@@ -269,6 +280,19 @@ def score_page_batch(
     (``compute_adc=False``) and HYBRID/MEM_ALL re-score covered neighbors
     with the finer in-memory codes via ``kernels.ops.pq_adc``.
 
+    ``fetch`` is the streaming page tier's host hook (see
+    ``stream_search``): when set, ``data.page_recs`` holds only the
+    resident subset. Resident lanes are scored by the SAME fused
+    ``ops.page_scan`` gather+scan over the device store the fully
+    resident graph uses (identical op pattern -> identical codegen ->
+    bit-identical floats); misses are pulled from the host memmap by the
+    callback and scored from that staged buffer by
+    ``ops.page_scan_recs`` (same per-record arithmetic). The two score
+    sets merge per lane — record bytes are exact copies either way, so
+    every score matches the fully resident search bit for bit.
+    ``fetch=None`` (fully resident) keeps the one-array fused scan
+    untouched.
+
     Returns (member_ids, member_dists) flattened to (b*cap,),
     (neighbor_ids, estimated_dists) flattened to (b*Rp,) and INF-masked,
     plus this hop's disk-I/O and cache-hit deltas.
@@ -278,11 +302,33 @@ def score_page_batch(
     safe = jnp.maximum(batch, 0)
     fetched = batch >= 0
 
-    ex, est_disk = ops.page_scan(
-        data.page_recs, safe, q, disk_lut,
-        capacity=cap, dim=q.shape[0], rp=rp,
-        compute_adc=mode != MemoryMode.MEM_ALL.value,
-    )
+    compute_adc = mode != MemoryMode.MEM_ALL.value
+    if fetch is None:
+        ex, est_disk = ops.page_scan(
+            data.page_recs, safe, q, disk_lut,
+            capacity=cap, dim=q.shape[0], rp=rp, compute_adc=compute_adc,
+        )
+    else:
+        slot = data.resident_map[safe]                  # (b,)
+        resident = slot >= 0
+        # host fetch only what the device lacks; everything else (resident
+        # pages, unselected PAD lanes) is masked to -1 and comes back as a
+        # zero record whose scores are discarded by the per-lane merge /
+        # downstream validity masks
+        staged = fetch(jnp.where(fetched & ~resident, safe, PAD))
+        ex_r, est_r = ops.page_scan(
+            data.page_recs, jnp.where(resident, slot, 0), q, disk_lut,
+            capacity=cap, dim=q.shape[0], rp=rp, compute_adc=compute_adc,
+        )
+        ex_s, est_s = ops.page_scan_recs(
+            staged, q, disk_lut,
+            capacity=cap, dim=q.shape[0], rp=rp, compute_adc=compute_adc,
+        )
+        ex = jnp.where(resident[:, None], ex_r, ex_s)
+        est_disk = (
+            None if est_r is None
+            else jnp.where(resident[:, None], est_r, est_s)
+        )
     slots = jnp.arange(cap)[None, :]
     ex = jnp.where(slots < data.member_count[safe][:, None], ex, INF)
     ex = jnp.where(fetched[:, None], ex, INF)
@@ -377,6 +423,7 @@ def _search_one(
     max_hops: int,
     entries: int,
     mode: str,
+    fetch=None,
 ):
     disk_lut = pq_mod.pq_lut(q, data.disk_codebooks)  # (M_disk, ksub)
     # the finer in-memory LUT is dead weight in DISK_ONLY mode — skip it
@@ -401,7 +448,7 @@ def _search_one(
         )
         mids, md, nids, nd, io_delta, hit_delta = score_page_batch(
             q, data, batch, state, disk_lut, mem_lut,
-            capacity=capacity, mode=mode,
+            capacity=capacity, mode=mode, fetch=fetch,
         )
         return merge(state, mids, md, nids, nd, io_delta, hit_delta)
 
@@ -421,6 +468,7 @@ def _batch_search_impl(
     max_hops: int,
     entries: int,
     mode: str,
+    fetch=None,
 ) -> SearchResult:
     fn = functools.partial(
         _search_one,
@@ -432,6 +480,7 @@ def _batch_search_impl(
         max_hops=max_hops,
         entries=entries,
         mode=mode,
+        fetch=fetch,
     )
     ids, dists, ios, hops, hits = jax.vmap(fn)(queries, valid)
     return SearchResult(ids=ids, dists=dists, ios=ios, hops=hops, cache_hits=hits)
@@ -478,6 +527,69 @@ def batch_search(
     return _batch_search_impl(
         queries, data, valid, **_impl_kwargs(params, capacity, mode)
     )
+
+
+# --------------------------------------------------------------------------
+# streaming entry point: resident subset on device, misses fetched per hop
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _stream_search_fn(fetcher, params: SearchParams, capacity: int, mode: str):
+    """jitted streaming search bound to one host fetcher.
+
+    Cached per (fetcher, params, capacity, mode): the fetcher is baked
+    into the executable as the hop body's host callback, so two streamed
+    indexes never share a compiled closure — mirrored in the serving
+    layer's compile-cache key (``serve.compile_cache.geometry_of``). The
+    fetcher participates in the lru key by identity, which is exactly the
+    sharing rule we want.
+    """
+    from repro.core import compat
+
+    kwargs = _impl_kwargs(params, capacity, mode)
+    rows, lanes = fetcher.record_shape
+
+    def fetch(ids: jnp.ndarray) -> jnp.ndarray:
+        return compat.pure_callback_batched(
+            fetcher,
+            jax.ShapeDtypeStruct(ids.shape + (rows, lanes), jnp.float32),
+            ids,
+        )
+
+    @jax.jit
+    def fn(queries, data, valid):
+        return _batch_search_impl(queries, data, valid, fetch=fetch, **kwargs)
+
+    return fn
+
+
+def stream_search(
+    queries: jnp.ndarray,
+    data: SearchData,
+    params: SearchParams,
+    *,
+    capacity: int,
+    mode: str,
+    fetcher,
+) -> SearchResult:
+    """``batch_search`` over a budgeted index: ``data.page_recs`` holds
+    only the resident page subset, and each hop's misses are pulled from
+    the host memmap by ``fetcher`` (a ``core.stream.PageFetcher``) through
+    a batched ``pure_callback`` — ONE host round-trip per hop for the
+    whole query batch.
+
+    Results are bit-identical to the fully resident ``batch_search`` on
+    the same artifact: the staged batch is scored by
+    ``kernels.ops.page_scan_recs`` with the same per-record compute, and
+    every counter in ``SearchResult`` (ios/hops/cache_hits) is carried
+    on-device independent of residency. (Host-side fetch counters are a
+    superset of the useful reads — a vmapped while_loop keeps converged
+    queries in the body until the whole batch exits, and their discarded
+    hops still fetch.)
+    """
+    fn = _stream_search_fn(fetcher, params, capacity, mode)
+    valid = jnp.ones((queries.shape[0],), bool)
+    return fn(queries, data, valid)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

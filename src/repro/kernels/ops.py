@@ -96,3 +96,21 @@ def page_scan(recs, page_ids, q, lut, *, capacity: int, dim: int, rp: int,
         recs, page_ids, q, lut,
         capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
     )
+
+
+def page_scan_recs(recs_b, q, lut, *, capacity: int, dim: int, rp: int,
+                   compute_adc: bool = True, impl: str | None = None,
+                   interpret: bool = False):
+    """Fused scan on an already-staged (b, rows, 128) record batch — the
+    streaming tier's scoring half (resident gathers + host-fetched misses
+    merged upstream). Scores match ``page_scan`` bit for bit."""
+    if _resolve(impl) == "pallas":
+        return ps_k.page_scan_recs(
+            recs_b, q, lut,
+            capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+            interpret=interpret or not _on_tpu(),
+        )
+    return ref.page_scan_recs_ref(
+        recs_b, q, lut,
+        capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+    )

@@ -108,6 +108,96 @@ def _page_scan_members_kernel(ids_ref, recs_ref, q_ref, md_ref, *, cap, dim):
     md_ref[...] = _member_l2(rec, q_ref[...].astype(jnp.float32), cap, dim)
 
 
+def _page_scan_recs_kernel(recs_ref, q_ref, lut_ref, md_ref, nd_ref,
+                           *, cap, dim, m):
+    rec = recs_ref[...].astype(jnp.float32)
+    qt = q_ref[...].astype(jnp.float32)
+    md_ref[...] = _member_l2(rec, qt, cap, dim)
+    nd_ref[...] = _neighbor_adc(
+        rec, lut_ref[...].astype(jnp.float32), _member_rows(cap, dim), m
+    )
+
+
+def _page_scan_recs_members_kernel(recs_ref, q_ref, md_ref, *, cap, dim):
+    rec = recs_ref[...].astype(jnp.float32)
+    md_ref[...] = _member_l2(rec, q_ref[...].astype(jnp.float32), cap, dim)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "dim", "rp", "compute_adc", "interpret")
+)
+def page_scan_recs(
+    recs_b: jnp.ndarray,
+    q: jnp.ndarray,
+    lut: jnp.ndarray,
+    *,
+    capacity: int,
+    dim: int,
+    rp: int,
+    compute_adc: bool = True,
+    interpret: bool = False,
+):
+    """``page_scan`` on an ALREADY-staged record batch: recs_b (b, rows,
+    128) f32, q: (d,), lut: (M_disk, K) f32.
+
+    The scoring half of the fused scan for the streaming page tier: the
+    hop's records arrive as a dense batch (resident gathers merged with
+    host-fetched misses), so the grid walks them in order — no scalar
+    prefetch, grid step i DMAs record i. Same per-record compute as the
+    fused kernel (``_member_l2`` / ``_neighbor_adc``), so scores match the
+    id-indexed path bit for bit.
+    -> (member_d (b, capacity) f32, nbr_d (b, rp) f32 or None)
+    """
+    b, rows, lanes = recs_b.shape
+    assert lanes == LANES and rp <= LANES
+    m = lut.shape[0]
+    if dim <= LANES:
+        vpr = _vpr(dim)
+        qt = jnp.zeros((1, LANES), jnp.float32).at[0, : vpr * dim].set(
+            jnp.tile(q.astype(jnp.float32), vpr)
+        )
+    else:
+        rpv = _rpv(dim)
+        qt = (
+            jnp.zeros((rpv * LANES,), jnp.float32)
+            .at[:dim].set(q.astype(jnp.float32))
+            .reshape(rpv, LANES)
+        )
+    rec_spec = pl.BlockSpec((1, rows, lanes), lambda i: (i, 0, 0))
+    q_spec = pl.BlockSpec(qt.shape, lambda i: (0, 0))
+    if not compute_adc:
+        md = pl.pallas_call(
+            functools.partial(
+                _page_scan_recs_members_kernel, cap=capacity, dim=dim
+            ),
+            grid=(b,),
+            in_specs=[rec_spec, q_spec],
+            out_specs=pl.BlockSpec((1, capacity), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, capacity), jnp.float32),
+            interpret=interpret,
+        )(recs_b, qt)
+        return md, None
+    md, nd = pl.pallas_call(
+        functools.partial(_page_scan_recs_kernel, cap=capacity, dim=dim, m=m),
+        grid=(b,),
+        in_specs=[
+            rec_spec,
+            q_spec,
+            pl.BlockSpec(lut.shape, lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, capacity), lambda i: (i, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, capacity), jnp.float32),
+            jax.ShapeDtypeStruct((b, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(recs_b, qt, lut.astype(jnp.float32))
+    return md, nd[:, :rp]
+
+
 @functools.partial(
     jax.jit, static_argnames=("capacity", "dim", "rp", "compute_adc", "interpret")
 )

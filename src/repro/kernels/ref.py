@@ -55,6 +55,50 @@ def page_gather_l2_ref(
     return (diff * diff).sum(-1)
 
 
+def page_scan_recs_ref(
+    recs_b: jnp.ndarray,
+    q: jnp.ndarray,
+    lut: jnp.ndarray,
+    *,
+    capacity: int,
+    dim: int,
+    rp: int,
+    compute_adc: bool = True,
+):
+    """``page_scan_ref`` on records that are ALREADY gathered/staged.
+
+    recs_b: (b, rows, 128) f32 packed page records — the hop's batch as a
+    dense array rather than (full store, ids). This is the scoring half of
+    the fused scan, split out so the streaming page tier (resident subset
+    on device + host-fetched misses) can score a mixed-origin batch.
+    ``page_scan_ref`` routes through here, so the two are bit-identical by
+    construction — the streaming path's guarantee.
+    -> (member_d (b, capacity) f32, nbr_d (b, rp) f32 or None).
+    """
+    b = recs_b.shape[0]
+    rv = record_layout.member_rows(capacity, dim)
+    if dim <= record_layout.PAGE_LANES:
+        vpr = record_layout.vectors_per_row(dim)
+        block = recs_b[:, :rv, : vpr * dim]            # (b, Rv, vpr*d)
+        vecs = block.reshape(b, rv * vpr, dim)[:, :capacity]
+    else:
+        rpv = record_layout.rows_per_vector(dim)
+        block = recs_b[:, :rv, :]                      # (b, cap*rpv, 128)
+        vecs = block.reshape(b, capacity, rpv * record_layout.PAGE_LANES)[
+            :, :, :dim
+        ]
+    diff = vecs.astype(jnp.float32) - q.astype(jnp.float32)[None, None, :]
+    member_d = (diff * diff).sum(-1)
+    if not compute_adc:
+        return member_d, None
+    m = lut.shape[0]
+    # subspace-major code rows: row Rv+j holds code j of every neighbor
+    codes = recs_b[:, rv:rv + m, :rp].astype(jnp.int32)
+    rows = jnp.arange(m)[None, :, None]                # (1, M, 1)
+    nbr_d = lut[rows, codes].astype(jnp.float32).sum(1)  # (b, rp)
+    return member_d, nbr_d
+
+
 def page_scan_ref(
     recs: jnp.ndarray,
     page_ids: jnp.ndarray,
@@ -73,25 +117,7 @@ def page_scan_ref(
     q: (d,), lut: (M_disk, K) f32.
     -> (member_d (b, capacity) f32, nbr_d (b, rp) f32 or None).
     """
-    b = page_ids.shape[0]
-    rv = record_layout.member_rows(capacity, dim)
-    if dim <= record_layout.PAGE_LANES:
-        vpr = record_layout.vectors_per_row(dim)
-        block = recs[page_ids, :rv, : vpr * dim]       # (b, Rv, vpr*d)
-        vecs = block.reshape(b, rv * vpr, dim)[:, :capacity]
-    else:
-        rpv = record_layout.rows_per_vector(dim)
-        block = recs[page_ids, :rv, :]                 # (b, cap*rpv, 128)
-        vecs = block.reshape(b, capacity, rpv * record_layout.PAGE_LANES)[
-            :, :, :dim
-        ]
-    diff = vecs.astype(jnp.float32) - q.astype(jnp.float32)[None, None, :]
-    member_d = (diff * diff).sum(-1)
-    if not compute_adc:
-        return member_d, None
-    m = lut.shape[0]
-    # subspace-major code rows: row Rv+j holds code j of every neighbor
-    codes = recs[page_ids, rv:rv + m, :rp].astype(jnp.int32)
-    rows = jnp.arange(m)[None, :, None]                # (1, M, 1)
-    nbr_d = lut[rows, codes].astype(jnp.float32).sum(1)  # (b, rp)
-    return member_d, nbr_d
+    return page_scan_recs_ref(
+        recs[page_ids], q, lut,
+        capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+    )

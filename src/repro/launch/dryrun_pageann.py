@@ -52,6 +52,7 @@ def synthetic_sharded_specs(cfg: PageANNConfig, num_shards: int):
         member_count=SDS((s, pages), jnp.int32),
         nbr_ids=SDS((s, pages, rp), jnp.int32),
         nbr_count=SDS((s, pages), jnp.int32),
+        resident_map=SDS((s, pages), jnp.int32),
         mem_codes=SDS((s, n_pad, m_mem), jnp.uint8),
         mem_mask=SDS((s, n_pad), jnp.bool_),
         mem_codebooks=SDS((s, m_mem, cfg.pq_ksub, DIM // m_mem), jnp.float32),

@@ -17,6 +17,11 @@ cycled over the prompt batch (e.g. ``--route :wiki,:notes`` sends prompt
 0 to ``wiki``, prompt 1 to ``notes``, prompt 2 to ``wiki``, …); it
 defaults to round-robin over every collection in the database.
 
+``--memory-budget`` serves the index (or every database collection) under
+an out-of-HBM memory budget: only the hottest page records stay resident
+on device, the rest stream from the artifact's ``pages.bin`` memmap per
+hop — same results, bounded footprint (see ``repro.core.MemoryBudget``).
+
 ``--mutable`` wraps the loaded index in a ``core.delta.MutableIndex`` (a
 loaded mutable artifact is already one) and exercises the write path
 end to end: the prompt embeddings are INSERTED as fresh documents through
@@ -88,7 +93,20 @@ def main(argv=None):
              "batch (e.g. ':wiki,:notes'); default round-robins every "
              "collection in the database",
     )
+    ap.add_argument(
+        "--memory-budget", default=None,
+        help="cap the device-resident page region of the loaded index / of "
+             "each database collection: bytes ('268435456', '256MB') or a "
+             "fraction of the page file ('0.25'); pages beyond the budget "
+             "stream from the pages.bin memmap per hop with bit-identical "
+             "results. Default: fully resident",
+    )
     args = ap.parse_args(argv)
+    memory_budget = None
+    if args.memory_budget is not None:
+        from repro.core import MemoryBudget
+
+        memory_budget = MemoryBudget.parse(args.memory_budget)
     if args.db_dir and args.index_dir:
         raise SystemExit("pass either --index-dir or --db-dir, not both")
 
@@ -106,7 +124,9 @@ def main(argv=None):
         emb = np.asarray(
             state.params["embed"][prompts].mean(axis=1), np.float32
         )
-        with VectorService.load(args.db_dir, batch_size=args.batch) as svc:
+        with VectorService.load(
+            args.db_dir, batch_size=args.batch, memory_budget=memory_budget
+        ) as svc:
             names = svc.list_collections()
             if not names:
                 raise SystemExit(f"{args.db_dir}: database has no collections")
@@ -141,7 +161,7 @@ def main(argv=None):
         from repro.core import MutableIndex, load_index
         from repro.serve import BatchingEngine
 
-        index = load_index(args.index_dir)
+        index = load_index(args.index_dir, memory_budget=memory_budget)
         if args.mutable and not isinstance(index, MutableIndex):
             index = MutableIndex(index)
         emb = np.asarray(

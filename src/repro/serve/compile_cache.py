@@ -99,13 +99,21 @@ def geometry_of(index: Any) -> tuple:
             (tuple(leaf.shape), str(leaf.dtype))
             for leaf in jax.tree.leaves(data)
         )
-        return (
+        key = (
             "pageann",
             cfg.dim,
             store.capacity,
             cfg.memory_mode.value,
             sig,
         )
+        fetcher = getattr(index, "fetcher", None)
+        if fetcher is not None:
+            # a streamed index's executable closes over its host fetcher
+            # (core.search._stream_search_fn is lru-cached per fetcher), so
+            # two streamed indexes never share one — the residency identity
+            # joins the key
+            key = key + (("stream", unshared_token(fetcher)),)
+        return key
     return ("unshared", unshared_token(index))
 
 

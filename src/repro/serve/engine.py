@@ -97,6 +97,10 @@ class EngineMetrics(NamedTuple):
     compile_hits: int = 0      # dispatches served by an already-warm executable
     compile_misses: int = 0    # dispatches that compiled a new executable
     compiled_executables: int = 0  # distinct (geometry, batch, params) signatures
+    # streaming page tier (summed over collections with a MemoryBudget):
+    pages_fetched: int = 0     # page records read off the host memmap
+    fetch_hits: int = 0        # page requests served by the staging cache
+    fetch_wall_s: float = 0.0  # wall seconds inside the host fetch callback
 
 
 class _Pending(NamedTuple):
@@ -119,6 +123,9 @@ class _Collection(NamedTuple):
     insert_fn: Callable | None
     delete_fn: Callable | None
     compact_fn: Callable | None
+    # () -> {pages_fetched, fetch_hits, fetch_wall_s}; None when the
+    # backend has no streaming page tier
+    fetch_stats_fn: Callable | None = None
 
 
 class BatchingEngine:
@@ -256,6 +263,9 @@ class BatchingEngine:
             insert_fn = insert_fn or getattr(index, "insert", None)
             delete_fn = delete_fn or getattr(index, "delete", None)
             compact_fn = compact_fn or getattr(index, "compact", None)
+            fetch_stats_fn = getattr(index, "fetch_stats", None)
+        else:
+            fetch_stats_fn = None
         if search_fn is None or dim is None:
             raise ValueError("add_collection needs (search_fn, dim) or index=")
         # same precedence as resolve_search_params: an explicit default_k
@@ -276,6 +286,7 @@ class BatchingEngine:
             insert_fn=insert_fn,
             delete_fn=delete_fn,
             compact_fn=compact_fn,
+            fetch_stats_fn=fetch_stats_fn,
         )
         with self._lock:
             if self._closed:
@@ -669,6 +680,21 @@ class BatchingEngine:
     def metrics(self) -> EngineMetrics:
         cc = self._compile_cache.stats()
         with self._lock:
+            fetch_fns = [
+                c.fetch_stats_fn
+                for c in self._collections.values()
+                if c.fetch_stats_fn is not None
+            ]
+        # backend counters are read outside the engine lock (each fetcher
+        # has its own lock); summed across every streamed collection
+        pages_fetched = fetch_hits = 0
+        fetch_wall_s = 0.0
+        for fn in fetch_fns:
+            fs = fn()
+            pages_fetched += int(fs.get("pages_fetched", 0))
+            fetch_hits += int(fs.get("fetch_hits", 0))
+            fetch_wall_s += float(fs.get("fetch_wall_s", 0.0))
+        with self._lock:
             lat = np.asarray(self._latencies_ms, np.float64)
             done = self._completed
             wall = (
@@ -701,6 +727,9 @@ class BatchingEngine:
                 compile_hits=cc.hits,
                 compile_misses=cc.misses,
                 compiled_executables=cc.unique,
+                pages_fetched=pages_fetched,
+                fetch_hits=fetch_hits,
+                fetch_wall_s=fetch_wall_s,
             )
 
     # ------------------------------------------------------------- builders

@@ -191,12 +191,20 @@ class VectorService:
         k: int | None = None,
         params: SearchParams | None = None,
         mesh=None,
+        memory_budget=None,
     ) -> CollectionHandle:
         """Load a persisted index artifact (any manifest kind) from
-        ``directory`` and register it as collection ``name``."""
+        ``directory`` and register it as collection ``name``.
+
+        ``memory_budget`` (``MemoryBudget`` | bytes | fraction | spec
+        string | None) caps the collection's device-resident page region —
+        pages beyond it stream from the artifact's memmap per hop with
+        bit-identical results (see ``PageANNIndex.load``)."""
         persist.check_collection_name(name)
         return self.create_collection(
-            name, persist.load_index(directory), k=k, params=params, mesh=mesh
+            name,
+            persist.load_index(directory, memory_budget=memory_budget),
+            k=k, params=params, mesh=mesh,
         )
 
     def drop(self, name: str) -> None:
@@ -295,13 +303,20 @@ class VectorService:
         persist.save_database(snapshot, directory)
 
     @classmethod
-    def load(cls, directory: str, **service_kwargs: Any) -> "VectorService":
+    def load(
+        cls, directory: str, *, memory_budget=None, **service_kwargs: Any
+    ) -> "VectorService":
         """Reopen a saved database as a ready-to-serve service: every
         collection in ``db.json`` is loaded (whatever index kind it
-        persisted as) and registered on a fresh shared core."""
+        persisted as) and registered on a fresh shared core.
+        ``memory_budget`` caps each collection's device-resident page
+        region independently (see :meth:`attach`)."""
         svc = cls(**service_kwargs)
         try:
-            for name, index in persist.load_database(directory).items():
+            loaded = persist.load_database(
+                directory, memory_budget=memory_budget
+            )
+            for name, index in loaded.items():
                 svc.create_collection(name, index)
         except Exception:
             svc.close()
