@@ -24,7 +24,7 @@ import time
 import numpy as np
 
 from benchmarks import common
-from repro.core import SearchParams, recall_at_k
+from repro.core import AdaptiveParams, SearchParams, recall_at_k
 from repro.core import baselines as bl
 
 # (beam L, LSH top-T) sweep — the paper's recall axis
@@ -73,7 +73,22 @@ def _curve_pageann(x, q, truth) -> tuple[list[dict], dict]:
         timing["rebuild_per_point_wall_s_est"] = (
             len(points) * acquire_s + search_s
         )
-    return curve, timing
+
+    # adaptive rows over the SAME built index: hand-picked defaults vs the
+    # same knobs with early termination vs the autotuned operating point —
+    # the I/O-reduction claim of the adaptive engine as a tracked number
+    from repro.data.pipeline import query_vectors
+
+    hand = SearchParams.from_config(cfg)
+    et = hand.replace(adaptive=AdaptiveParams(patience=2))
+    adaptive = _sweep_index(idx, q, truth, "pageann_hand", [hand])
+    adaptive += _sweep_index(idx, q, truth, "pageann_early_term", [et])
+    tuned = idx.autotune(
+        np.asarray(query_vectors(x, len(q), seed=2)),
+        recall_target=0.95, k=10, patience_grid=(None, 2, 4),
+    )["params"]
+    adaptive += _sweep_index(idx, q, truth, "pageann_autotuned", [tuned])
+    return curve + adaptive, timing
 
 
 def _curve_baseline(x, q, truth, style: str) -> list[dict]:

@@ -13,6 +13,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        adaptive,
         build_overhead,
         memory_sweep,
         read_amplification,
@@ -25,13 +26,16 @@ def main() -> None:
     # benchmarks.serve_database are NOT registered here: CI runs each as
     # its own gated step (--check BENCH_serve.json / --smoke) right after
     # this harness, and registering them too would pay for their sweeps
-    # twice.
+    # twice. benchmarks.adaptive IS registered: its CI step runs only the
+    # tiny --smoke gate (fresh 1200-vector index), so the full sweep here
+    # is not duplicated work.
     modules = [
         ("table1_read_amplification", read_amplification),
         ("fig7_8_table3_recall_io", recall_io),
         ("fig10_11_table4_memory_sweep", memory_sweep),
         ("fig12_scaling", scaling),
         ("table5_build_overhead", build_overhead),
+        ("adaptive_engine", adaptive),
         ("serve_throughput", serve_throughput),
     ]
     failures = 0

@@ -1,5 +1,6 @@
 """PageANN core: the paper's contribution as composable JAX modules."""
 from repro.core.config import (
+    AdaptiveParams,
     DeltaParams,
     MemoryBudget,
     MemoryMode,
@@ -12,6 +13,7 @@ from repro.core.persist import IndexFormatError, load_index
 from repro.core.protocol import MutableVectorIndex, VectorIndex
 
 __all__ = [
+    "AdaptiveParams",
     "DeltaParams",
     "DeltaTier",
     "IndexFormatError",

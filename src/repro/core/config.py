@@ -31,6 +31,77 @@ class MemoryMode(enum.Enum):
 
 
 @dataclasses.dataclass(frozen=True)
+class AdaptiveParams:
+    """Query-adaptive search knobs (the PR-7 adaptive engine). Frozen and
+    hashable so a value can ride :class:`SearchParams` into a static jit
+    argument. Every feature is off by default (``None``), and an
+    all-``None`` value compiles to the exact non-adaptive program — results
+    are bit-identical to a search with ``adaptive=None``.
+
+    * **Early termination** (``patience`` / ``epsilon``): the hop loop
+      carries a per-query stall counter that increments whenever the worst
+      of the running top-k fails to improve by more than ``epsilon`` and
+      resets on improvement; a query whose counter reaches ``patience``
+      exits its lane instead of running to ``max_hops``. Easy queries stop
+      paying worst-case page reads; hard ones keep hopping.
+    * **Query-sensitive entry selection** (``entry_slack_bits`` /
+      ``min_entries``): the LSH router's top-T Hamming distances are a
+      per-query entry-quality signal. Only candidates within
+      ``entry_slack_bits`` Hamming bits of the best candidate seed the
+      beam (never fewer than ``min_entries``): a confidently-routed query
+      starts from its few genuinely close entries instead of a fixed-size
+      slice, while a poorly-routed (flat-profile) query keeps the whole
+      top-T to hedge.
+    """
+
+    # early termination: consecutive non-improving hops before a query's
+    # lane exits (None = run to max_hops, exactly the non-adaptive loop)
+    patience: int | None = None
+    # minimum improvement of the worst top-k distance that counts as
+    # progress (absolute squared-L2; 0.0 = any strict improvement)
+    epsilon: float = 0.0
+    # entry selection: Hamming slack (in bits) around the best entry
+    # candidate that keeps a candidate as a beam seed (None = disabled,
+    # seed all top-T as before)
+    entry_slack_bits: int | None = None
+    # floor on per-query seeded entries when entry selection is on
+    min_entries: int = 1
+
+    def __post_init__(self):
+        problems = []
+        if self.patience is not None and self.patience < 1:
+            problems.append(f"patience must be >= 1 (got {self.patience})")
+        if not self.epsilon >= 0.0:
+            problems.append(f"epsilon must be >= 0 (got {self.epsilon})")
+        if self.entry_slack_bits is not None and self.entry_slack_bits < 0:
+            problems.append(
+                f"entry_slack_bits must be >= 0 (got {self.entry_slack_bits})"
+            )
+        if self.min_entries < 1:
+            problems.append(f"min_entries must be >= 1 (got {self.min_entries})")
+        if problems:
+            raise ValueError(
+                "invalid AdaptiveParams: " + "; ".join(problems)
+            )
+        object.__setattr__(self, "epsilon", float(self.epsilon))
+
+    @property
+    def enabled(self) -> bool:
+        """Whether any adaptive feature is actually on."""
+        return self.patience is not None or self.entry_slack_bits is not None
+
+    def replace(self, **kw) -> "AdaptiveParams":
+        return dataclasses.replace(self, **kw)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "AdaptiveParams":
+        return cls(**doc)
+
+
+@dataclasses.dataclass(frozen=True)
 class SearchParams:
     """Runtime search knobs (Alg. 2), decoupled from the build-time config.
 
@@ -40,6 +111,11 @@ class SearchParams:
     instead of rebuilding it per point. Everything that shapes the on-disk
     artifact (page geometry, PQ, memory mode) stays in
     :class:`PageANNConfig`; everything here may vary per search call.
+
+    ``adaptive`` carries the query-adaptive knobs (:class:`AdaptiveParams`:
+    per-query early termination + entry selection); ``None`` — and an
+    all-default ``AdaptiveParams()`` — compile to the exact non-adaptive
+    program.
     """
 
     k: int = 10              # result set size
@@ -47,16 +123,49 @@ class SearchParams:
     io_batch: int = 5        # b: batched I/O size (paper uses 5)
     max_hops: int = 64       # safety bound on the search while_loop
     lsh_entries: int = 16    # T: top-T Hamming entry candidates
+    adaptive: AdaptiveParams | None = None  # query-adaptive knobs (off=None)
 
     def __post_init__(self):
         # beam_width >= lsh_entries is a PageANN-path invariant, enforced
         # where the LSH router is actually used (core.search) — baseline
-        # indexes ignore lsh_entries and accept any positive beam
-        if self.k <= 0:
-            raise ValueError("k must be positive")
-        if min(self.beam_width, self.io_batch, self.max_hops,
-               self.lsh_entries) <= 0:
-            raise ValueError("all SearchParams fields must be positive")
+        # indexes ignore lsh_entries and accept any positive beam. Every
+        # violated field is reported in ONE error, not first-wins.
+        problems = [
+            f"{name} must be positive (got {getattr(self, name)})"
+            for name in ("k", "beam_width", "io_batch", "max_hops",
+                         "lsh_entries")
+            if getattr(self, name) <= 0
+        ]
+        if self.adaptive is not None and not isinstance(
+            self.adaptive, AdaptiveParams
+        ):
+            problems.append(
+                "adaptive must be an AdaptiveParams or None "
+                f"(got {type(self.adaptive).__name__})"
+            )
+        if problems:
+            raise ValueError("invalid SearchParams: " + "; ".join(problems))
+
+    def pageann_violations(self) -> list:
+        """Cross-field invariants of the PageANN search path (the LSH
+        router actually seeds the beam there; baselines ignore these).
+        Returns ALL violations so the caller can raise them in one error."""
+        problems = []
+        if self.beam_width < self.lsh_entries:
+            problems.append(
+                "beam_width >= lsh_entries is required: the top-T LSH "
+                f"entry candidates seed the beam (got L={self.beam_width}, "
+                f"T={self.lsh_entries})"
+            )
+        a = self.adaptive
+        if a is not None and a.entry_slack_bits is not None \
+                and a.min_entries > self.lsh_entries:
+            problems.append(
+                "adaptive.min_entries <= lsh_entries is required: the "
+                "entry floor cannot exceed the candidate pool (got "
+                f"min_entries={a.min_entries}, T={self.lsh_entries})"
+            )
+        return problems
 
     @classmethod
     def from_config(cls, cfg: "PageANNConfig", k: int = 10) -> "SearchParams":
@@ -71,6 +180,20 @@ class SearchParams:
 
     def replace(self, **kw) -> "SearchParams":
         return dataclasses.replace(self, **kw)
+
+    def to_json(self) -> dict:
+        doc = dataclasses.asdict(self)
+        doc["adaptive"] = (
+            self.adaptive.to_json() if self.adaptive is not None else None
+        )
+        return doc
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "SearchParams":
+        doc = dict(doc)
+        if doc.get("adaptive") is not None:
+            doc["adaptive"] = AdaptiveParams.from_json(doc["adaptive"])
+        return cls(**doc)
 
 
 def resolve_search_params(

@@ -29,6 +29,7 @@ from repro.core import pq as pq_mod
 from repro.core import search as search_mod
 from repro.core import vamana as vamana_mod
 from repro.core.config import (
+    AdaptiveParams,
     MemoryMode,
     PageANNConfig,
     SearchParams,
@@ -82,6 +83,12 @@ class PageANNIndex:
     # counts); persisted so a budgeted load pins the right pages
     page_order: np.ndarray | None = None
     memory_budget: object | None = None
+    # autotuned operating points (``autotune``): measured
+    # {params, recall, qps, p99_us, target} dicts, persisted in the
+    # manifest's ``tuned`` section; ``tuned_default`` is the point serving
+    # resolves as this index's default SearchParams
+    tuned: list = dataclasses.field(default_factory=list)
+    tuned_default: SearchParams | None = None
 
     # ------------------------------------------------------------------ build
     @staticmethod
@@ -182,7 +189,11 @@ class PageANNIndex:
 
     @property
     def default_params(self) -> SearchParams:
-        """The build config's search knobs as a runtime parameter set."""
+        """The runtime parameter set searches resolve when none is given:
+        the autotuned operating point if one is stored (``autotune`` /
+        the manifest's ``tuned.default``), else the build config's knobs."""
+        if self.tuned_default is not None:
+            return self.tuned_default
         return SearchParams.from_config(self.cfg)
 
     def resolve_params(
@@ -293,6 +304,186 @@ class PageANNIndex:
             hops=np.asarray(res.hops),
             cache_hits=np.asarray(res.cache_hits),
         )
+
+    # -------------------------------------------------------------- autotune
+    def _measure(
+        self, queries: jnp.ndarray, params: SearchParams, truth: np.ndarray
+    ) -> dict:
+        """One operating point: recall + timed wall clock over the batch.
+
+        The first call per distinct ``params`` compiles (SearchParams is a
+        static jit arg); timing reruns the compiled executable. p99 latency
+        is estimated from the hop distribution — per-query cost is hop-
+        dominated (each hop is one batched page-record read), so
+        ``mean_us * p99_hops / mean_hops`` prices the straggler lanes
+        without needing per-query timers inside one vmapped batch."""
+        res = self._raw_search(queries, params)          # compile + warm
+        jnp.asarray(res.ids).block_until_ready()
+        t0 = time.perf_counter()
+        res = self._raw_search(queries, params)
+        jnp.asarray(res.ids).block_until_ready()
+        wall = time.perf_counter() - t0
+        found = self.translate_ids(np.asarray(res.ids))
+        recall = recall_at_k(found[:, : truth.shape[1]], truth)
+        hops = np.asarray(res.hops)
+        mean_us = wall / queries.shape[0] * 1e6
+        mean_hops = float(hops.mean())
+        p99_scale = (
+            float(np.percentile(hops, 99)) / mean_hops if mean_hops else 1.0
+        )
+        return dict(
+            params=params,
+            recall=float(recall),
+            qps=queries.shape[0] / wall if wall > 0 else float("inf"),
+            mean_us=mean_us,
+            p99_us=mean_us * p99_scale,
+            mean_hops=mean_hops,
+            mean_ios=float(np.asarray(res.ios).mean()),
+        )
+
+    def autotune(
+        self,
+        queries: np.ndarray,
+        *,
+        recall_target: float | None = None,
+        p99_target_us: float | None = None,
+        k: int = 10,
+        truth: np.ndarray | None = None,
+        beam_grid: tuple | None = None,
+        patience_grid: tuple = (None, 2, 4),
+        io_batch_grid: tuple | None = None,
+        entries_grid: tuple | None = None,
+        store: bool = True,
+    ) -> dict:
+        """Find the cheapest operating point meeting a recall (or p99
+        latency) target over THIS loaded index — no rebuilds, one compiled
+        executable per probed ``SearchParams`` (cheap since PR 3).
+
+        Recall mode: recall is monotone in beam width, so binary-search the
+        beam ladder for the cheapest rung meeting ``recall_target``, then
+        refine around it with the adaptive knobs (early-termination
+        patience, io_batch, entry count/slack) and keep the highest-QPS
+        variant still meeting the target. Latency mode
+        (``p99_target_us``): highest-recall measured point within budget.
+
+        The winner is appended to ``self.tuned`` and becomes
+        ``default_params`` (``store=True``); ``save`` round-trips it
+        through the manifest's ``tuned`` section so
+        ``load_index(...).search(q)`` and ``--recall-target`` serving run
+        it with zero per-process retuning. Returns the winning measurement
+        dict (params/recall/qps/p99_us/...).
+        """
+        if (recall_target is None) == (p99_target_us is None):
+            raise ValueError(
+                "autotune needs exactly one of recall_target= or "
+                "p99_target_us="
+            )
+        q = jnp.asarray(queries, jnp.float32)
+        if truth is None:
+            truth = vamana_mod.brute_force_knn(
+                self.vectors_by_original_id(), np.asarray(queries), k
+            )
+        truth = np.asarray(truth)[:, :k]
+
+        base = SearchParams.from_config(self.cfg, k=k)
+        t = base.lsh_entries
+        if beam_grid is None:
+            bw = base.beam_width
+            beam_grid = tuple(sorted({max(t, bw // 4), max(t, bw // 2),
+                                      bw, 2 * bw}))
+        beam_grid = tuple(sorted(beam_grid))
+        measured: list[dict] = []
+
+        def probe(p: SearchParams) -> dict:
+            m = self._measure(q, p, truth)
+            measured.append(m)
+            return m
+
+        if recall_target is not None:
+            # binary search the beam ladder: cheapest rung >= target
+            lo, hi = 0, len(beam_grid) - 1
+            best_rung = None
+            while lo <= hi:
+                mid = (lo + hi) // 2
+                m = probe(base.replace(beam_width=beam_grid[mid]))
+                if m["recall"] >= recall_target:
+                    best_rung = m
+                    hi = mid - 1
+                else:
+                    lo = mid + 1
+            if best_rung is None:       # even the widest rung missed
+                best_rung = max(measured, key=lambda m: m["recall"])
+            # refine at the chosen rung: adaptive + cheaper-I/O variants
+            rung = best_rung["params"]
+            variants: list[SearchParams] = []
+            for pat in patience_grid:
+                if pat is not None:
+                    variants.append(rung.replace(
+                        adaptive=AdaptiveParams(patience=pat)))
+            for iob in (io_batch_grid or ()):
+                if iob != rung.io_batch:
+                    variants.append(rung.replace(io_batch=iob))
+            for ent in (entries_grid or ()):
+                if ent != rung.lsh_entries and ent <= rung.beam_width:
+                    variants.append(rung.replace(lsh_entries=ent))
+            for v in variants:
+                probe(v)
+            ok = [m for m in measured if m["recall"] >= recall_target]
+            pool = ok or [max(measured, key=lambda m: m["recall"])]
+            winner = max(pool, key=lambda m: m["qps"])
+            target = {"recall": recall_target}
+        else:
+            for b in beam_grid:
+                probe(base.replace(beam_width=b))
+                for pat in patience_grid:
+                    if pat is not None:
+                        probe(base.replace(
+                            beam_width=b,
+                            adaptive=AdaptiveParams(patience=pat)))
+            ok = [m for m in measured if m["p99_us"] <= p99_target_us]
+            pool = ok or [min(measured, key=lambda m: m["p99_us"])]
+            winner = max(pool, key=lambda m: m["recall"])
+            target = {"p99_us": p99_target_us}
+
+        winner = dict(winner, target=target)
+        if store:
+            self.tuned.append(winner)
+            self.tuned_default = winner["params"]
+        return winner
+
+    def params_for_target(
+        self,
+        recall_target: float | None = None,
+        p99_target_us: float | None = None,
+    ) -> SearchParams:
+        """Resolve a stored tuned operating point for a serving target.
+
+        Picks among points recorded by ``autotune`` (round-tripped through
+        the manifest): for a recall target, the highest-QPS point whose
+        measured recall meets it; for a latency target, the highest-recall
+        point within budget. Raises ``LookupError`` when nothing stored
+        qualifies — serving surfaces that as "autotune this index first"."""
+        if (recall_target is None) == (p99_target_us is None):
+            raise ValueError(
+                "need exactly one of recall_target= or p99_target_us="
+            )
+        if recall_target is not None:
+            ok = [m for m in self.tuned if m["recall"] >= recall_target]
+            if not ok:
+                raise LookupError(
+                    f"no tuned operating point reaches recall "
+                    f"{recall_target}: run autotune(queries, recall_target="
+                    f"{recall_target}) on this index and save it"
+                )
+            return max(ok, key=lambda m: m["qps"])["params"]
+        ok = [m for m in self.tuned if m["p99_us"] <= p99_target_us]
+        if not ok:
+            raise LookupError(
+                f"no tuned operating point meets p99 <= {p99_target_us}us: "
+                f"run autotune(queries, p99_target_us={p99_target_us}) on "
+                "this index and save it"
+            )
+        return max(ok, key=lambda m: m["recall"])["params"]
 
     # -------------------------------------------------------------- lifecycle
     def save(self, directory: str) -> None:

@@ -229,7 +229,42 @@ def save_pageann(index, directory: str) -> None:
                 resident_pages=store.resident_pages,
                 total_pages=pages,
             ),
+            # autotuned operating points (index.autotune): measured
+            # {params, recall, qps, ...} entries plus which one serving
+            # should resolve as the default SearchParams
+            tuned=_tuned_to_json(index),
         ),
+    )
+
+
+def _tuned_to_json(index) -> dict:
+    points = []
+    for m in getattr(index, "tuned", []) or []:
+        doc = {
+            key: val for key, val in m.items() if key != "params"
+        }
+        doc["params"] = m["params"].to_json()
+        points.append(doc)
+    default = getattr(index, "tuned_default", None)
+    return dict(
+        default=default.to_json() if default is not None else None,
+        points=points,
+    )
+
+
+def _tuned_from_json(doc: dict | None) -> tuple[list, "SearchParams | None"]:
+    from repro.core.config import SearchParams
+
+    if not doc:            # pre-adaptive artifacts carry no tuned section
+        return [], None
+    points = []
+    for entry in doc.get("points", []):
+        m = dict(entry)
+        m["params"] = SearchParams.from_json(m["params"])
+        points.append(m)
+    default = doc.get("default")
+    return points, (
+        SearchParams.from_json(default) if default is not None else None
     )
 
 
@@ -353,6 +388,7 @@ def load_pageann(directory: str, *, memory_budget=None):
     stats.disk_bytes = os.path.getsize(pages_path)
     stats.resident_pages = store.resident_pages
     stats.resident_bytes = store.resident_bytes
+    tuned, tuned_default = _tuned_from_json(doc.get("tuned"))
     return PageANNIndex(
         cfg=cfg,
         store=store,
@@ -363,6 +399,8 @@ def load_pageann(directory: str, *, memory_budget=None):
         fetcher=fetcher,
         page_order=page_order,
         memory_budget=memory_budget,
+        tuned=tuned,
+        tuned_default=tuned_default,
     )
 
 

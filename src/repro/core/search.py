@@ -116,7 +116,13 @@ class SearchResult(NamedTuple):
 
 
 class BeamState(NamedTuple):
-    """Per-query loop state of Algorithm 2 (one pytree, while_loop carry)."""
+    """Per-query loop state of Algorithm 2 (one pytree, while_loop carry).
+
+    The two adaptive fields are ``None`` — absent from the pytree — unless
+    per-query early termination is on (``AdaptiveParams.patience``), so the
+    non-adaptive loop carries the exact pre-adaptive structure and compiles
+    to the same program.
+    """
 
     cand_ids: jnp.ndarray   # (L,) candidate vector ids, PAD padded
     cand_d: jnp.ndarray     # (L,) estimated distances, INF padded
@@ -127,6 +133,11 @@ class BeamState(NamedTuple):
     io: jnp.ndarray         # () page reads served from 'disk'
     cache_hits: jnp.ndarray  # () page reads served by the warmed cache
     hops: jnp.ndarray       # () loop iterations
+    # early termination (None unless patience is set): the worst running
+    # top-k distance at the last improving hop, and how many consecutive
+    # hops failed to improve it by more than epsilon
+    frontier: jnp.ndarray | None = None   # () f32
+    stall: jnp.ndarray | None = None      # () int32 patience counter
 
 
 def _mask_dups_keep_first(ids: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
@@ -166,14 +177,34 @@ def init_state(
     beam: int,
     k: int,
     entries: int,
+    entry_slack: int | None = None,
+    min_entries: int = 1,
+    patience: int | None = None,
 ) -> BeamState:
-    """In-memory routing (Alg. 2 line 4, Fig. 6 step 1): LSH entry points."""
+    """In-memory routing (Alg. 2 line 4, Fig. 6 step 1): LSH entry points.
+
+    With query-sensitive entry selection on (``entry_slack`` is not None),
+    the top-T Hamming profile becomes a per-query entry-quality signal:
+    only candidates within ``entry_slack`` bits of the best candidate seed
+    the beam (at least ``min_entries`` by rank). A confidently-routed query
+    — a sharply peaked profile — starts from its few genuinely close
+    entries instead of the fixed top-T slice, so it schedules fewer junk
+    pages on the opening hops; a flat profile (poorly routed, hard query)
+    keeps the whole top-T. Fixed-shape and vmap-safe: dropped candidates
+    are masked to PAD/INF in place, never compacted.
+    """
     num_pages = data.resident_map.shape[0]
     qcode = hash_codes(q[None], data.lsh_planes)[0]
     ham = ops.hamming(data.lsh_codes, qcode)
-    _, top = _top_k_merge(ham.astype(jnp.float32), entries)
+    ham_top, top = _top_k_merge(ham.astype(jnp.float32), entries)
     entry_ids = data.lsh_ids[top].astype(jnp.int32)
     entry_d = ops.pq_adc(data.lsh_pq[top], disk_lut)
+    if entry_slack is not None:
+        keep = (ham_top <= ham_top[0] + float(entry_slack)) | (
+            jnp.arange(entries) < min_entries
+        )
+        entry_ids = jnp.where(keep, entry_ids, PAD)
+        entry_d = jnp.where(keep, entry_d, INF)
     entry_d = _mask_dups_keep_first(entry_ids, entry_d)
 
     cand_ids = jnp.full((beam,), PAD, jnp.int32).at[:entries].set(entry_ids)
@@ -188,6 +219,8 @@ def init_state(
         io=jnp.int32(0),
         cache_hits=jnp.int32(0),
         hops=jnp.int32(0),
+        frontier=None if patience is None else jnp.float32(INF),
+        stall=None if patience is None else jnp.int32(0),
     )
 
 
@@ -381,10 +414,19 @@ def merge(
     nbr_d: jnp.ndarray,
     io_delta: jnp.ndarray,
     hit_delta: jnp.ndarray,
+    *,
+    patience: int | None = None,
+    epsilon: float = 0.0,
 ) -> BeamState:
     """Fold exact member scores into the result top-k and estimated
     neighbor scores into the beam (Alg. 2 line 12, Fig. 6 step 5) —
-    ``lax.top_k`` selections, no full argsort merges."""
+    ``lax.top_k`` selections, no full argsort merges.
+
+    With early termination on (``patience``), this is also where the
+    convergence signal updates: the worst of the new top-k either improved
+    on the carried frontier by more than ``epsilon`` (stall resets) or it
+    did not (stall increments) — the loop cond trips the lane once stall
+    reaches ``patience``."""
     k = state.res_ids.shape[0]
     beam = state.cand_ids.shape[0]
 
@@ -399,6 +441,17 @@ def merge(
         [state.cand_vis, jnp.zeros(nbr_ids.shape, bool)]
     )
     cand_d, order = _top_k_merge(all_cd, beam)
+    if patience is None:
+        frontier, stall = state.frontier, state.stall
+    else:
+        # the running top-k only tightens, so the worst slot is monotone
+        # non-increasing; "improved" means it dropped by more than epsilon
+        # since the previous hop (INF - finite epsilon stays INF, so the
+        # unfilled opening hops compare correctly)
+        worst = res_d[k - 1]
+        improved = worst < state.frontier - jnp.float32(epsilon)
+        frontier = worst
+        stall = jnp.where(improved, jnp.int32(0), state.stall + 1)
     return state._replace(
         cand_ids=all_ci[order],
         cand_d=cand_d,
@@ -408,6 +461,8 @@ def merge(
         io=state.io + io_delta,
         cache_hits=state.cache_hits + hit_delta,
         hops=state.hops + 1,
+        frontier=frontier,
+        stall=stall,
     )
 
 
@@ -424,6 +479,10 @@ def _search_one(
     entries: int,
     mode: str,
     fetch=None,
+    patience: int | None = None,
+    epsilon: float = 0.0,
+    entry_slack: int | None = None,
+    min_entries: int = 1,
 ):
     disk_lut = pq_mod.pq_lut(q, data.disk_codebooks)  # (M_disk, ksub)
     # the finer in-memory LUT is dead weight in DISK_ONLY mode — skip it
@@ -432,7 +491,10 @@ def _search_one(
         if mode != MemoryMode.DISK_ONLY.value
         else None
     )
-    state = init_state(q, data, disk_lut, beam=beam, k=k, entries=entries)
+    state = init_state(
+        q, data, disk_lut, beam=beam, k=k, entries=entries,
+        entry_slack=entry_slack, min_entries=min_entries, patience=patience,
+    )
 
     def cond(state: BeamState):
         live = (
@@ -440,7 +502,13 @@ def _search_one(
             & (state.cand_ids != PAD)
             & jnp.isfinite(state.cand_d)
         )
-        return live.any() & (state.hops < max_hops) & valid
+        go = live.any() & (state.hops < max_hops) & valid
+        if patience is not None:
+            # per-query early termination: once the worst of the top-k
+            # stalled for `patience` consecutive hops, this lane exits
+            # (vmap freezes it via select while stragglers keep hopping)
+            go = go & (state.stall < patience)
+        return go
 
     def body(state: BeamState):
         state, batch = select_batch(
@@ -450,7 +518,10 @@ def _search_one(
             q, data, batch, state, disk_lut, mem_lut,
             capacity=capacity, mode=mode, fetch=fetch,
         )
-        return merge(state, mids, md, nids, nd, io_delta, hit_delta)
+        return merge(
+            state, mids, md, nids, nd, io_delta, hit_delta,
+            patience=patience, epsilon=epsilon,
+        )
 
     state = jax.lax.while_loop(cond, body, state)
     return state.res_ids, state.res_d, state.io, state.hops, state.cache_hits
@@ -469,6 +540,10 @@ def _batch_search_impl(
     entries: int,
     mode: str,
     fetch=None,
+    patience: int | None = None,
+    epsilon: float = 0.0,
+    entry_slack: int | None = None,
+    min_entries: int = 1,
 ) -> SearchResult:
     fn = functools.partial(
         _search_one,
@@ -481,18 +556,23 @@ def _batch_search_impl(
         entries=entries,
         mode=mode,
         fetch=fetch,
+        patience=patience,
+        epsilon=epsilon,
+        entry_slack=entry_slack,
+        min_entries=min_entries,
     )
     ids, dists, ios, hops, hits = jax.vmap(fn)(queries, valid)
     return SearchResult(ids=ids, dists=dists, ios=ios, hops=hops, cache_hits=hits)
 
 
 def _impl_kwargs(params: SearchParams, capacity: int, mode: str) -> dict:
-    if params.beam_width < params.lsh_entries:
+    problems = params.pageann_violations()
+    if problems:
+        # every violated invariant in ONE error, not first-wins
         raise ValueError(
-            "PageANN search needs beam_width >= lsh_entries: the top-T LSH "
-            f"entry candidates seed the beam (got L={params.beam_width}, "
-            f"T={params.lsh_entries})"
+            "invalid SearchParams for PageANN search: " + "; ".join(problems)
         )
+    a = params.adaptive
     return dict(
         capacity=capacity,
         beam=params.beam_width,
@@ -501,6 +581,10 @@ def _impl_kwargs(params: SearchParams, capacity: int, mode: str) -> dict:
         max_hops=params.max_hops,
         entries=params.lsh_entries,
         mode=mode,
+        patience=None if a is None else a.patience,
+        epsilon=0.0 if a is None else a.epsilon,
+        entry_slack=None if a is None else a.entry_slack_bits,
+        min_entries=1 if a is None else a.min_entries,
     )
 
 

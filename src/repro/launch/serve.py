@@ -101,6 +101,15 @@ def main(argv=None):
              "stream from the pages.bin memmap per hop with bit-identical "
              "results. Default: fully resident",
     )
+    ap.add_argument(
+        "--recall-target", type=float, default=None,
+        help="serve the index with the autotuned operating point meeting "
+             "this recall (the manifest 'tuned' section written by "
+             "PageANNIndex.autotune) instead of hand-picked SearchParams. "
+             "With --index-dir an artifact with no qualifying tuned point "
+             "fails loudly; with --db-dir collections without one keep "
+             "their own defaults",
+    )
     args = ap.parse_args(argv)
     memory_budget = None
     if args.memory_budget is not None:
@@ -125,7 +134,8 @@ def main(argv=None):
             state.params["embed"][prompts].mean(axis=1), np.float32
         )
         with VectorService.load(
-            args.db_dir, batch_size=args.batch, memory_budget=memory_budget
+            args.db_dir, batch_size=args.batch, memory_budget=memory_budget,
+            recall_target=args.recall_target,
         ) as svc:
             names = svc.list_collections()
             if not names:
@@ -162,6 +172,22 @@ def main(argv=None):
         from repro.serve import BatchingEngine
 
         index = load_index(args.index_dir, memory_budget=memory_budget)
+        tuned_params = None
+        if args.recall_target is not None:
+            # strict: a serving target against an artifact with no
+            # qualifying tuned point is an operator error, not a fallback
+            try:
+                tuned_params = index.params_for_target(
+                    recall_target=args.recall_target
+                )
+            except (LookupError, AttributeError) as e:
+                raise SystemExit(
+                    f"--recall-target {args.recall_target}: {e}"
+                )
+            print(
+                f"--recall-target {args.recall_target}: serving tuned "
+                f"operating point {tuned_params}"
+            )
         if args.mutable and not isinstance(index, MutableIndex):
             index = MutableIndex(index)
         emb = np.asarray(
@@ -172,7 +198,8 @@ def main(argv=None):
                 f"prompt embedding dim {emb.shape[1]} != index dim {index.dim}"
             )
         with BatchingEngine.from_index(
-            index, k=args.retrieve_k, batch_size=args.batch
+            index, k=args.retrieve_k, batch_size=args.batch,
+            params=tuned_params,
         ) as engine:
             rows = engine.search(emb)
             ids = np.stack([r.result.ids for r in rows])

@@ -101,6 +101,14 @@ class EngineMetrics(NamedTuple):
     pages_fetched: int = 0     # page records read off the host memmap
     fetch_hits: int = 0        # page requests served by the staging cache
     fetch_wall_s: float = 0.0  # wall seconds inside the host fetch callback
+    # traversal cost per request (trailing window over SearchResult
+    # counters) — where adaptive early termination shows up in serving
+    mean_hops: float = 0.0     # mean while_loop hops per request
+    p99_hops: float = 0.0
+    p99_ios: float = 0.0
+    # requests whose search exited before the resolved params' max_hops
+    # (early termination, beam exhaustion, or convergence)
+    early_exits: int = 0
 
 
 class _Pending(NamedTuple):
@@ -169,6 +177,14 @@ class BatchingEngine:
         self._latencies_ms: collections.deque = collections.deque(
             maxlen=latency_window
         )
+        # per-request traversal cost (SearchResult hops/ios), same window
+        self._hops_win: collections.deque = collections.deque(
+            maxlen=latency_window
+        )
+        self._ios_win: collections.deque = collections.deque(
+            maxlen=latency_window
+        )
+        self._early_exits = 0
         self._inserts = 0
         self._deletes = 0
         self._compactions = 0
@@ -648,6 +664,7 @@ class BatchingEngine:
 
         t_done = self._clock()
         ios = getattr(out, "ios", None)
+        hops = getattr(out, "hops", None)
         latencies = [(t_done - p.t_submit) * 1e3 for p in take]
         with self._lock:
             self._dispatched_rows += self._batch_size
@@ -657,6 +674,16 @@ class BatchingEngine:
             self._latencies_ms.extend(latencies)
             if ios is not None:
                 self._total_ios += float(np.sum(ios[:n]))
+                self._ios_win.extend(np.asarray(ios[:n]).ravel().tolist())
+            if hops is not None:
+                self._hops_win.extend(np.asarray(hops[:n]).ravel().tolist())
+                if isinstance(resolved, SearchParams):
+                    # requests that exited the hop loop before the resolved
+                    # params' bound: adaptive early termination (or natural
+                    # beam exhaustion) visibly saving page reads
+                    self._early_exits += int(
+                        np.sum(np.asarray(hops[:n]) < resolved.max_hops)
+                    )
         for i, p in enumerate(take):
             row = jax.tree.map(lambda a: a[i], out)
             if p.k < k_bin:
@@ -696,6 +723,8 @@ class BatchingEngine:
             fetch_wall_s += float(fs.get("fetch_wall_s", 0.0))
         with self._lock:
             lat = np.asarray(self._latencies_ms, np.float64)
+            hops_win = np.asarray(self._hops_win, np.float64)
+            ios_win = np.asarray(self._ios_win, np.float64)
             done = self._completed
             wall = (
                 (self._t_last - self._t_first)
@@ -730,6 +759,14 @@ class BatchingEngine:
                 pages_fetched=pages_fetched,
                 fetch_hits=fetch_hits,
                 fetch_wall_s=fetch_wall_s,
+                mean_hops=float(hops_win.mean()) if len(hops_win) else 0.0,
+                p99_hops=(
+                    float(np.percentile(hops_win, 99)) if len(hops_win) else 0.0
+                ),
+                p99_ios=(
+                    float(np.percentile(ios_win, 99)) if len(ios_win) else 0.0
+                ),
+                early_exits=self._early_exits,
             )
 
     # ------------------------------------------------------------- builders

@@ -192,6 +192,7 @@ class VectorService:
         params: SearchParams | None = None,
         mesh=None,
         memory_budget=None,
+        recall_target: float | None = None,
     ) -> CollectionHandle:
         """Load a persisted index artifact (any manifest kind) from
         ``directory`` and register it as collection ``name``.
@@ -199,12 +200,25 @@ class VectorService:
         ``memory_budget`` (``MemoryBudget`` | bytes | fraction | spec
         string | None) caps the collection's device-resident page region —
         pages beyond it stream from the artifact's memmap per hop with
-        bit-identical results (see ``PageANNIndex.load``)."""
+        bit-identical results (see ``PageANNIndex.load``).
+
+        ``recall_target`` resolves the collection's serving defaults from
+        the artifact's autotuned operating points (the manifest ``tuned``
+        section written by ``PageANNIndex.autotune``): the highest-QPS
+        stored point whose measured recall meets the target. Strict — an
+        artifact with no qualifying point (or no tuned section at all)
+        raises ``LookupError`` rather than silently serving hand-picked
+        params. Mutually exclusive with an explicit ``params``."""
         persist.check_collection_name(name)
+        index = persist.load_index(directory, memory_budget=memory_budget)
+        if recall_target is not None:
+            if params is not None:
+                raise ValueError(
+                    "pass either params= or recall_target=, not both"
+                )
+            params = index.params_for_target(recall_target=recall_target)
         return self.create_collection(
-            name,
-            persist.load_index(directory, memory_budget=memory_budget),
-            k=k, params=params, mesh=mesh,
+            name, index, k=k, params=params, mesh=mesh,
         )
 
     def drop(self, name: str) -> None:
@@ -304,20 +318,40 @@ class VectorService:
 
     @classmethod
     def load(
-        cls, directory: str, *, memory_budget=None, **service_kwargs: Any
+        cls,
+        directory: str,
+        *,
+        memory_budget=None,
+        recall_target: float | None = None,
+        **service_kwargs: Any,
     ) -> "VectorService":
         """Reopen a saved database as a ready-to-serve service: every
         collection in ``db.json`` is loaded (whatever index kind it
         persisted as) and registered on a fresh shared core.
         ``memory_budget`` caps each collection's device-resident page
-        region independently (see :meth:`attach`)."""
+        region independently (see :meth:`attach`).
+
+        ``recall_target`` resolves each collection's serving defaults from
+        its autotuned operating points where possible. Lenient per
+        collection — a database mixes index kinds and tuning states, so a
+        collection with no qualifying tuned point keeps its own defaults
+        instead of failing the whole load (use :meth:`attach` for the
+        strict single-artifact behavior)."""
         svc = cls(**service_kwargs)
         try:
             loaded = persist.load_database(
                 directory, memory_budget=memory_budget
             )
             for name, index in loaded.items():
-                svc.create_collection(name, index)
+                params = None
+                if recall_target is not None:
+                    try:
+                        params = index.params_for_target(
+                            recall_target=recall_target
+                        )
+                    except (LookupError, AttributeError):
+                        params = None
+                svc.create_collection(name, index, params=params)
         except Exception:
             svc.close()
             raise

@@ -1,0 +1,285 @@
+"""Adaptive query engine (PR 7): query-sensitive entry selection,
+per-query early termination, and recall/latency autotuning.
+
+The load-bearing guarantees:
+  * disabled adaptive features are a no-op at the BIT level — ids, dists,
+    ios, hops, and cache_hits all equal the pre-adaptive loop, on every
+    memory mode and on the streamed (memory-budgeted) path;
+  * early termination trades nothing it should not: hops(enabled) <=
+    hops(disabled) pointwise, recall stays within a tight parity bound,
+    and easy (duplicate-of-base) queries exit well before ``max_hops``;
+  * combined validation reports EVERY violated field in one error;
+  * ``autotune`` meets its recall floor and the operating point
+    round-trips through the manifest into ``load_index`` /
+    ``VectorService.attach(recall_target=...)`` defaults.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptiveParams,
+    MemoryBudget,
+    MemoryMode,
+    PageANNConfig,
+    PageANNIndex,
+    SearchParams,
+    load_index,
+    recall_at_k,
+)
+from repro.core.vamana import brute_force_knn
+from repro.data.pipeline import clustered_vectors, query_vectors
+
+N, D, Q = 2500, 32, 25
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    x = clustered_vectors(N, D, num_clusters=32, seed=0)
+    q = query_vectors(x, Q, seed=1)
+    truth = brute_force_knn(x, q, 10)
+    return x, q, truth
+
+
+def _cfg(**kw):
+    base = dict(
+        dim=D, graph_degree=16, build_beam=32, pq_subspaces=8,
+        lsh_sample=512, lsh_entries=8, beam_width=64, max_hops=48,
+        memory_mode=MemoryMode.HYBRID,
+    )
+    base.update(kw)
+    return PageANNConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def hybrid_index(dataset):
+    x, _, _ = dataset
+    return PageANNIndex.build(x, _cfg())
+
+
+# ------------------------------------------------------------- validation
+def test_searchparams_reports_every_violation_in_one_error():
+    with pytest.raises(ValueError) as e:
+        SearchParams(k=0, beam_width=-1, io_batch=0)
+    msg = str(e.value)
+    assert "k must be positive (got 0)" in msg
+    assert "beam_width must be positive (got -1)" in msg
+    assert "io_batch must be positive (got 0)" in msg
+
+
+def test_searchparams_rejects_non_adaptive_adaptive():
+    with pytest.raises(ValueError, match="adaptive must be an AdaptiveParams"):
+        SearchParams(adaptive="patience=2")
+
+
+def test_adaptiveparams_reports_every_violation_in_one_error():
+    with pytest.raises(ValueError) as e:
+        AdaptiveParams(patience=0, epsilon=-1.0, entry_slack_bits=-3,
+                       min_entries=0)
+    msg = str(e.value)
+    assert "patience must be >= 1 (got 0)" in msg
+    assert "epsilon must be >= 0 (got -1.0)" in msg
+    assert "entry_slack_bits must be >= 0 (got -3)" in msg
+    assert "min_entries must be >= 1 (got 0)" in msg
+
+
+def test_pageann_path_reports_cross_field_violations_together(hybrid_index):
+    """The beam>=entries invariant and the adaptive entry-floor invariant
+    are both PageANN-path checks; a params value violating both must name
+    both in one search-time error."""
+    p = SearchParams(
+        beam_width=4, lsh_entries=8,
+        adaptive=AdaptiveParams(entry_slack_bits=2, min_entries=9),
+    )
+    with pytest.raises(ValueError) as e:
+        hybrid_index.search(np.zeros((1, D), np.float32), params=p)
+    msg = str(e.value)
+    assert "beam_width >= lsh_entries" in msg
+    assert "min_entries <= lsh_entries" in msg
+
+
+# ----------------------------------------------------- disabled bit-identity
+@pytest.fixture(scope="module", params=list(MemoryMode), ids=lambda m: m.value)
+def mode_index(request, dataset):
+    x, _, _ = dataset
+    return PageANNIndex.build(x, _cfg(memory_mode=request.param))
+
+
+def _assert_results_equal(want, got, context=""):
+    for field in want._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(want, field)),
+            np.asarray(getattr(got, field)),
+            err_msg=f"{context}SearchResult.{field}",
+        )
+
+
+def test_disabled_adaptive_bit_identical_all_modes(dataset, mode_index):
+    """adaptive=None and an all-default AdaptiveParams() must compile to
+    the exact pre-adaptive program: every SearchResult field bit-equal,
+    on every memory-disk coordination mode."""
+    _, q, _ = dataset
+    base = SearchParams.from_config(mode_index.cfg)
+    want = mode_index.search(q, params=base)
+    got = mode_index.search(q, params=base.replace(adaptive=AdaptiveParams()))
+    _assert_results_equal(want, got, f"{mode_index.cfg.memory_mode.value}: ")
+
+
+def test_disabled_adaptive_bit_identical_streamed(dataset, hybrid_index):
+    """Same guarantee on the memory-budgeted streaming path (0.25x
+    residency): the adaptive no-op composes with the PR-6 bit-identity."""
+    _, q, _ = dataset
+    base = SearchParams.from_config(hybrid_index.cfg)
+    with tempfile.TemporaryDirectory() as d:
+        hybrid_index.save(d)
+        streamed = load_index(d, memory_budget=MemoryBudget(fraction=0.25))
+        assert streamed.fetcher is not None
+        want = streamed.search(q, params=base)
+        got = streamed.search(
+            q, params=base.replace(adaptive=AdaptiveParams())
+        )
+    _assert_results_equal(want, got, "streamed: ")
+    # and the streamed adaptive run matches the resident adaptive run
+    resident = hybrid_index.search(
+        q, params=base.replace(adaptive=AdaptiveParams(patience=2))
+    )
+    with tempfile.TemporaryDirectory() as d:
+        hybrid_index.save(d)
+        streamed = load_index(d, memory_budget=MemoryBudget(fraction=0.25))
+        got = streamed.search(
+            q, params=base.replace(adaptive=AdaptiveParams(patience=2))
+        )
+    _assert_results_equal(resident, got, "streamed adaptive: ")
+
+
+# -------------------------------------------------------- early termination
+def test_early_termination_hops_monotone_and_recall_parity(dataset,
+                                                           hybrid_index):
+    x, q, truth = dataset
+    base = SearchParams.from_config(hybrid_index.cfg)
+    off = hybrid_index.search(q, params=base)
+    on = hybrid_index.search(
+        q, params=base.replace(adaptive=AdaptiveParams(patience=2))
+    )
+    # a lane can only exit EARLIER: the cond gained a conjunct
+    assert (np.asarray(on.hops) <= np.asarray(off.hops)).all()
+    assert (np.asarray(on.ios) <= np.asarray(off.ios)).all()
+    r_off = recall_at_k(off.ids, truth)
+    r_on = recall_at_k(on.ids, truth)
+    assert r_on >= r_off - 0.02, (r_on, r_off)
+
+
+def test_easy_queries_terminate_before_max_hops(dataset, hybrid_index):
+    """Duplicate-of-base queries converge immediately; with patience set
+    they must exit strictly before the max_hops safety bound — and spend
+    strictly fewer hops than the non-adaptive run on average."""
+    x, _, _ = dataset
+    rng = np.random.default_rng(7)
+    easy = x[rng.choice(len(x), 16, replace=False)]
+    base = SearchParams.from_config(hybrid_index.cfg)
+    off = hybrid_index.search(easy, params=base)
+    on = hybrid_index.search(
+        easy, params=base.replace(adaptive=AdaptiveParams(patience=1))
+    )
+    hops = np.asarray(on.hops)
+    assert (hops < hybrid_index.cfg.max_hops).all()
+    assert hops.mean() < np.asarray(off.hops).mean()
+    # each duplicate still finds itself at distance ~0
+    assert np.allclose(np.asarray(on.dists)[:, 0], 0.0, atol=1e-4)
+
+
+def test_entry_selection_recall_parity(dataset, hybrid_index):
+    _, q, truth = dataset
+    base = SearchParams.from_config(hybrid_index.cfg)
+    res = hybrid_index.search(
+        q,
+        params=base.replace(
+            adaptive=AdaptiveParams(entry_slack_bits=4, min_entries=4)
+        ),
+    )
+    assert recall_at_k(res.ids, truth) >= 0.8
+
+
+# ---------------------------------------------------------------- autotune
+def test_autotune_meets_recall_floor_and_roundtrips(dataset):
+    x, q, truth = dataset
+    idx = PageANNIndex.build(x, _cfg())
+    win = idx.autotune(q, recall_target=0.9, truth=truth,
+                       beam_grid=(16, 32, 64))
+    assert win["recall"] >= 0.9
+    assert idx.default_params == win["params"]
+    with tempfile.TemporaryDirectory() as d:
+        idx.save(d)
+        loaded = load_index(d)
+        # the tuned operating point IS the loaded default
+        assert loaded.default_params == win["params"]
+        assert loaded.params_for_target(recall_target=0.9) == win["params"]
+        with pytest.raises(LookupError, match="no tuned operating point"):
+            loaded.params_for_target(recall_target=0.9999999)
+        # and searching with no explicit params runs it
+        res = loaded.search(q, k=10)
+        assert recall_at_k(res.ids, truth) >= 0.85
+
+
+def test_autotune_rejects_ambiguous_target(hybrid_index):
+    with pytest.raises(ValueError, match="exactly one of"):
+        hybrid_index.autotune(np.zeros((4, D), np.float32))
+    with pytest.raises(ValueError, match="exactly one of"):
+        hybrid_index.params_for_target()
+
+
+def test_autotune_latency_target(dataset):
+    x, q, truth = dataset
+    idx = PageANNIndex.build(x, _cfg())
+    win = idx.autotune(q, p99_target_us=10_000_000.0, truth=truth,
+                       beam_grid=(16, 32), patience_grid=(None, 2))
+    # an absurdly generous budget: every point qualifies, the best-recall
+    # one wins and is stored
+    assert win["p99_us"] <= 10_000_000.0
+    assert idx.params_for_target(p99_target_us=10_000_000.0) == win["params"]
+
+
+def test_service_attach_recall_target(dataset):
+    from repro.serve import VectorService
+
+    x, q, truth = dataset
+    idx = PageANNIndex.build(x, _cfg())
+    idx.autotune(q, recall_target=0.9, truth=truth, beam_grid=(32, 64))
+    tuned = idx.tuned_default
+    with tempfile.TemporaryDirectory() as d:
+        idx.save(d)
+        with VectorService(batch_size=4) as svc:
+            h = svc.attach("tunedcol", d, recall_target=0.9)
+            assert (
+                svc._engine._collections["tunedcol"].default_params == tuned
+            )
+            rows = h.search(np.asarray(q)[:4], k=10)
+            assert len(rows) == 4
+            # strict: an unreachable target refuses to attach
+            with pytest.raises(LookupError, match="no tuned operating point"):
+                svc.attach("strict", d, recall_target=0.9999999)
+            with pytest.raises(ValueError, match="not both"):
+                svc.attach("both", d, recall_target=0.9,
+                           params=SearchParams())
+
+
+# ----------------------------------------------------------- engine metrics
+def test_engine_metrics_surface_hops_and_early_exits(dataset):
+    from repro.serve import BatchingEngine
+
+    x, q, _ = dataset
+    idx = PageANNIndex.build(x, _cfg())
+    params = SearchParams.from_config(idx.cfg).replace(
+        adaptive=AdaptiveParams(patience=2)
+    )
+    with BatchingEngine.from_index(
+        idx, k=10, batch_size=8, params=params
+    ) as eng:
+        eng.search(np.asarray(q)[:8])
+        m = eng.metrics()
+    assert m.mean_hops > 0
+    assert m.p99_hops >= m.mean_hops
+    assert m.p99_ios > 0
+    # every lane converged before the max_hops safety bound here
+    assert m.early_exits == 8
