@@ -15,6 +15,7 @@ def main() -> None:
     from benchmarks import (
         adaptive,
         build_overhead,
+        filter_cache,
         memory_sweep,
         read_amplification,
         recall_io,
@@ -37,6 +38,7 @@ def main() -> None:
         ("table5_build_overhead", build_overhead),
         ("adaptive_engine", adaptive),
         ("serve_throughput", serve_throughput),
+        ("filter_cache", filter_cache),
     ]
     failures = 0
     print("name,us_per_call,derived")

@@ -1,13 +1,21 @@
 """Retrieval-augmented serving: PageANN as a first-class serving feature.
 
 A small LM embeds each request (mean-pooled hidden state), a
-multi-collection :class:`repro.serve.VectorService` retrieves the nearest
-passages' ids from the collection the request names, and the retrieved
-context tokens are prepended before greedy decoding — the kNN-augmented
-serving loop the paper's index accelerates, served database-style: a
-"passages" corpus and a "notes" corpus live behind ONE service (one
-batching core, one compile cache), and each request routes by collection
-name.
+:class:`repro.serve.VectorService` retrieves the nearest passages' ids,
+and the retrieved context tokens are prepended before greedy decoding —
+the kNN-augmented serving loop the paper's index accelerates.
+
+This demo serves ONE shared document collection to several agents, each
+seeing only its own tag-namespaced slice: every document carries an
+``agent`` tag ("support", "research", or "shared"), and each agent's
+retrievals run with ``filter=Tag("agent").isin(<name>, "shared")`` — the
+predicate is enforced *inside* the page scan, so there is one index, one
+page file, one compile cache, and N isolated views. A
+:class:`repro.serve.SemanticCache` sits in front of the service:
+re-asked (re-embedded) questions within a cosine threshold of an answered
+one are served from the cache without touching the index — scoped per
+(collection, k, params, filter), so one agent's cached answers never
+leak into another agent's view.
 
   PYTHONPATH=src python examples/serve_rag.py
 """
@@ -16,11 +24,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.core import MemoryMode, PageANNConfig, SearchParams
+from repro.core import MemoryMode, MetadataSchema, PageANNConfig, Tag
 from repro.launch.serve import generate
 from repro.models import transformer as tf
-from repro.serve import VectorService
+from repro.serve import SemanticCache, VectorService
 from repro.train.step import init_train_state
+
+AGENTS = ("support", "research")
 
 
 def embed(params, arch, tokens):
@@ -42,67 +52,77 @@ def main():
     arch = get_arch("granite-3-2b", smoke=True)
     state = init_train_state(arch, jax.random.PRNGKey(0))
 
-    # two corpora: 2000 synthetic passages plus a smaller "notes" corpus —
-    # the index key is each document's mean token embedding (same space as
-    # query embeddings)
+    # one shared corpus of 2000 synthetic passages; each document is owned
+    # by one agent (or "shared", visible to all). The index key is the
+    # document's mean token embedding (same space as query embeddings).
     rng = np.random.default_rng(0)
-    corpora = {}
-    for name, rows in (("passages", 2000), ("notes", 600)):
-        tokens = rng.integers(0, arch.vocab_size, (rows, 16), np.int32)
-        corpora[name] = (
-            tokens,
-            np.asarray(embed(state.params, arch, jnp.asarray(tokens)),
-                       np.float32),
-        )
+    rows = 2000
+    tokens = rng.integers(0, arch.vocab_size, (rows, 16), np.int32)
+    doc_emb = np.asarray(
+        embed(state.params, arch, jnp.asarray(tokens)), np.float32
+    )
+    owners = rng.choice(AGENTS + ("shared",), size=rows).tolist()
 
-    dim = corpora["passages"][1].shape[1]
+    dim = doc_emb.shape[1]
     cfg = PageANNConfig(
         dim=dim, graph_degree=16, build_beam=32,
         pq_subspaces=8, lsh_sample=512, lsh_entries=8,
         beam_width=48, memory_mode=MemoryMode.HYBRID,
     )
+    schema = MetadataSchema(tags=("agent",))
+    views = {a: Tag("agent").isin(a, "shared") for a in AGENTS}
 
-    # requests arrive one at a time, each naming its collection; the one
-    # shared service collects them into per-(collection, k-bin, params)
-    # fixed-shape dispatches and demuxes results per request. The last
-    # request also carries its own runtime knobs (a wider beam), forming
-    # its own dispatch group.
-    with VectorService(batch_size=4) as svc:
-        for name, (_, emb_rows) in corpora.items():
-            print(f"building PageANN collection {name!r} "
-                  f"({len(emb_rows)} docs) …")
-            svc.create_collection(name, cfg, emb_rows, k=3)
+    with VectorService(
+        batch_size=4, semantic_cache=SemanticCache(threshold=0.98)
+    ) as svc:
+        print(f"building shared PageANN collection ({rows} docs, "
+              f"agents: {', '.join(AGENTS)} + shared) …")
+        svc.create_collection(
+            "docs", cfg, doc_emb, k=3,
+            schema=schema, metadata={"agent": owners},
+        )
 
         requests = jnp.asarray(
             rng.integers(0, arch.vocab_size, (4, 8), np.int32)
         )
         q_emb = np.asarray(embed(state.params, arch, requests), np.float32)
-        # route: even requests search the passages, odd ones the notes
-        route = ["passages", "notes", "passages", "notes"]
-        wide = SearchParams(k=3, beam_width=64, lsh_entries=12)
+        # requests alternate between the two agents; each dispatch group is
+        # keyed by its filter, so the two views never share a batch — and
+        # never see each other's documents
+        route = [AGENTS[i % len(AGENTS)] for i in range(len(q_emb))]
         futures = [
-            svc.submit(route[i], q,
-                       params=wide if i == len(q_emb) - 1 else None)
-            for i, q in enumerate(q_emb)
+            svc.submit("docs", q, filter=views[agent])
+            for agent, q in zip(route, q_emb)
         ]
         svc.flush()
-        rows = [f.result() for f in futures]
-        ids = np.stack([r.result.ids for r in rows])
-        ios = np.stack([r.result.ios for r in rows])
-        for i, (coll, r) in enumerate(zip(route, rows)):
-            print(f"request {i} -> :{coll} -> ids {np.asarray(r.result.ids)}")
-        print(f"mean page reads/request: {ios.mean():.1f}")
+        rows_out = [f.result() for f in futures]
+        ids = np.stack([r.result.ids for r in rows_out])
+        for i, (agent, r) in enumerate(zip(route, rows_out)):
+            got = np.asarray(r.result.ids)
+            seen = {owners[d] for d in got if d >= 0}
+            print(f"request {i} [{agent}] -> ids {got} "
+                  f"(owners: {sorted(seen)})")
+            assert seen <= {agent, "shared"}, "view isolation violated"
+
+        # the same questions again: answered from the semantic cache, no
+        # index dispatch — but only within the SAME agent's view
+        replay = [
+            svc.submit("docs", q, filter=views[agent])
+            for agent, q in zip(route, q_emb)
+        ]
+        svc.flush()
+        n_cached = sum(f.result().cached for f in replay)
         m = svc.metrics()
-        print(f"service: {m.requests} requests over {m.collections} "
-              f"collections in {m.batches} batch(es), "
+        print(f"replayed {len(replay)} requests: {n_cached} served from "
+              f"the semantic cache ({m.semantic_hits} hits / "
+              f"{m.semantic_misses} misses)")
+        print(f"service: {m.requests} requests in {m.batches} batch(es), "
               f"p50 latency {m.latency_ms_p50:.1f} ms, compile cache "
               f"{m.compile_hits} hits / {m.compile_misses} misses")
 
-    # prepend each request's top document (from ITS collection) and decode
+    # prepend each request's top document (from ITS view) and decode
     top = np.where(ids[:, 0] >= 0, ids[:, 0], 0)
-    context = jnp.asarray(
-        np.stack([corpora[coll][0][t] for coll, t in zip(route, top)])
-    )
+    context = jnp.asarray(tokens[top])
     prompts = jnp.concatenate([context, requests], axis=1)
     out = generate(state.params, arch, prompts, gen=8)
     print(f"generated continuation tokens:\n{np.asarray(out)}")

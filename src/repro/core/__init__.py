@@ -2,12 +2,14 @@
 from repro.core.config import (
     AdaptiveParams,
     DeltaParams,
+    FilterParams,
     MemoryBudget,
     MemoryMode,
     PageANNConfig,
     SearchParams,
 )
 from repro.core.delta import DeltaTier, MutableIndex
+from repro.core.filter import FilterExpr, MetadataSchema, Num, Tag
 from repro.core.index import PageANNIndex, recall_at_k
 from repro.core.persist import IndexFormatError, load_index
 from repro.core.protocol import MutableVectorIndex, VectorIndex
@@ -16,14 +18,19 @@ __all__ = [
     "AdaptiveParams",
     "DeltaParams",
     "DeltaTier",
+    "FilterExpr",
+    "FilterParams",
     "IndexFormatError",
     "MemoryBudget",
     "MemoryMode",
+    "MetadataSchema",
     "MutableIndex",
     "MutableVectorIndex",
+    "Num",
     "PageANNConfig",
     "PageANNIndex",
     "SearchParams",
+    "Tag",
     "VectorIndex",
     "load_index",
     "recall_at_k",

@@ -340,6 +340,27 @@ class DeltaParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class FilterParams:
+    """Knobs of the filtered-search path (``repro.core.filter``).
+
+    Filtered-out page members are scored to ``+inf`` inside the page
+    scan, so a selective predicate needs a wider beam to surface enough
+    passing candidates — the same pow2-bucketed oversampling the
+    tombstone path uses, driven by the predicate's measured selectivity.
+    """
+
+    # beam_width is multiplied by the next power of two of
+    # (1 / selectivity), capped here so jit shapes stay bounded; past the
+    # cap a very selective filter may under-recall until the caller
+    # widens the beam explicitly
+    max_filter_oversample: int = 64
+
+    def __post_init__(self):
+        if self.max_filter_oversample < 1:
+            raise ValueError("max_filter_oversample must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
 class PageANNConfig:
     dim: int
     # --- Vamana vector-graph build (Sec 4.1 starts from a Vamana graph) ---

@@ -37,14 +37,17 @@ the rebuild, so writes (not reads) stall during compaction.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 from typing import Any, NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import filter as filter_mod
 from repro.core import search as search_mod
 from repro.core.config import DeltaParams, SearchParams, resolve_search_params
+from repro.core.filter import CompiledFilter, FilterExpr, MetaArrays
 from repro.kernels import ops
 
 PAD = -1
@@ -97,6 +100,8 @@ class DeltaView(NamedTuple):
     ids: np.ndarray           # (Cpad,) int64 external ids, PAD padded
     live: np.ndarray          # (Cpad,) bool
     device: _DeviceCache      # lazy (vecs_dev, live_dev)
+    tags: np.ndarray          # (Cpad, T) int32 tag codes, -1 padded
+    nums: np.ndarray          # (Cpad, N) f32 numerics, NaN padded
 
 
 class DeltaTier:
@@ -108,12 +113,20 @@ class DeltaTier:
     marks rows dead without reclaiming them — compaction is the reclaim.
     """
 
-    def __init__(self, dim: int, capacity: int = 256):
+    def __init__(self, dim: int, capacity: int = 256, *,
+                 n_tags: int = 0, n_nums: int = 0):
         cap = _pow2(max(int(capacity), 8))
         self.dim = int(dim)
+        self.n_tags = int(n_tags)
+        self.n_nums = int(n_nums)
         self._vecs = np.zeros((cap, self.dim), np.float32)
         self._ids = np.full((cap,), PAD, np.int64)
         self._live = np.zeros((cap,), bool)
+        # metadata columns share the encoding invariants of the page-
+        # aligned base tier: missing tag = -1, missing numeric = NaN, so
+        # un-annotated (and padded) rows match no filter clause
+        self._tags = np.full((cap, self.n_tags), -1, np.int32)
+        self._nums = np.full((cap, self.n_nums), np.nan, np.float32)
         self._count = 0
         self._slot_of: dict[int, int] = {}   # live external id -> row
         self._view: DeltaView | None = None
@@ -139,11 +152,17 @@ class DeltaTier:
         vecs = np.zeros((new_cap, self.dim), np.float32)
         ids = np.full((new_cap,), PAD, np.int64)
         live = np.zeros((new_cap,), bool)
+        tags = np.full((new_cap, self.n_tags), -1, np.int32)
+        nums = np.full((new_cap, self.n_nums), np.nan, np.float32)
         c = self._count
         vecs[:c], ids[:c], live[:c] = self._vecs[:c], self._ids[:c], self._live[:c]
+        tags[:c], nums[:c] = self._tags[:c], self._nums[:c]
         self._vecs, self._ids, self._live = vecs, ids, live
+        self._tags, self._nums = tags, nums
 
-    def insert(self, vectors: np.ndarray, ids: np.ndarray) -> None:
+    def insert(self, vectors: np.ndarray, ids: np.ndarray, *,
+               tags: np.ndarray | None = None,
+               nums: np.ndarray | None = None) -> None:
         vectors = np.ascontiguousarray(vectors, np.float32).reshape(-1, self.dim)
         ids = np.asarray(ids, np.int64).reshape(-1)
         if vectors.shape[0] != ids.shape[0]:
@@ -165,6 +184,14 @@ class DeltaTier:
         self._vecs[rows] = vectors
         self._ids[rows] = ids
         self._live[rows] = True
+        if tags is not None:
+            self._tags[rows] = np.asarray(tags, np.int32).reshape(
+                n, self.n_tags
+            )
+        if nums is not None:
+            self._nums[rows] = np.asarray(nums, np.float32).reshape(
+                n, self.n_nums
+            )
         for j, i in enumerate(ids.tolist()):
             self._slot_of[int(i)] = self._count + j
         self._count += n
@@ -194,16 +221,24 @@ class DeltaTier:
                 ids=self._ids[:cpad].copy(),
                 live=live,
                 device=_DeviceCache(vecs, live),
+                tags=self._tags[:cpad],
+                nums=self._nums[:cpad],
             )
         return self._view
 
 
 def scan_delta(
-    view: DeltaView, queries: np.ndarray, k: int
+    view: DeltaView, queries: np.ndarray, k: int,
+    cfilter: CompiledFilter | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Exact top-k of the delta tier: (ids (Q, kk), dists (Q, kk)) with
     kk = min(k, padded rows); empty (Q, 0) streams when nothing is live.
-    Non-finite distances carry PAD ids (fewer than kk live rows)."""
+    Non-finite distances carry PAD ids (fewer than kk live rows).
+    ``cfilter`` masks rows failing the predicate exactly like dead rows —
+    freshly inserted vectors are filterable immediately, no compaction
+    needed. The row mask is evaluated host-side (the delta is in-memory
+    and small by construction) so the jitted scan sees one extra (C,)
+    bool input, not a recompiling static."""
     qn = queries.shape[0]
     if view.n_live == 0 or k == 0:
         return (
@@ -212,8 +247,13 @@ def scan_delta(
         )
     vecs_dev, live_dev = view.device.get()
     kk = min(k, vecs_dev.shape[0])
+    mask = None
+    if cfilter is not None:
+        mask = jnp.asarray(
+            filter_mod.filter_mask_np(cfilter, view.tags, view.nums)
+        )
     dists, slots = ops.delta_scan(
-        jnp.asarray(queries, jnp.float32), vecs_dev, live_dev, kk
+        jnp.asarray(queries, jnp.float32), vecs_dev, live_dev, kk, mask=mask
     )
     dists = np.asarray(dists)
     ids = view.ids[np.asarray(slots)]
@@ -229,6 +269,7 @@ class _MutableState(NamedTuple):
     tombstones: np.ndarray    # sorted int64 external ids deleted from base
     delta: DeltaView
     generation: int           # compaction counter (mirrors the manifest)
+    vocab: dict | None = None  # unified tag vocabulary (None: no schema)
 
 
 @dataclasses.dataclass
@@ -283,7 +324,14 @@ class MutableIndex:
         self.auto_compact = auto_compact
         self._lock = threading.RLock()
         self._directory: str | None = None
-        self._delta = DeltaTier(base.dim, self.delta_params.min_capacity)
+        # unified append-only vocabulary: starts as the base's, grows as
+        # inserts carry unseen tag values. Base codes never move, so the
+        # base tier keeps compiling filters against its own vocab while
+        # the delta tier encodes/compiles against this superset.
+        self._vocab: dict[str, tuple[str, ...]] = dict(
+            getattr(base, "vocab", None) or {}
+        )
+        self._delta = self._new_delta(base)
         self._next_id = int(base_ids.max()) + 1 if base_ids.size else 0
         self._state = _MutableState(
             base=base,
@@ -294,12 +342,34 @@ class MutableIndex:
             tombstones=np.empty((0,), np.int64),
             delta=self._delta.snapshot(),
             generation=0,
+            vocab=(
+                dict(self._vocab)
+                if getattr(base, "schema", None) is not None else None
+            ),
+        )
+
+    def _new_delta(self, base) -> DeltaTier:
+        schema = getattr(base, "schema", None)
+        return DeltaTier(
+            base.dim,
+            self.delta_params.min_capacity,
+            n_tags=len(schema.tags) if schema is not None else 0,
+            n_nums=len(schema.numerics) if schema is not None else 0,
         )
 
     # ------------------------------------------------------------ protocol
     @property
     def base(self):
         return self._state.base
+
+    @property
+    def schema(self):
+        return getattr(self._state.base, "schema", None)
+
+    @property
+    def vocab(self) -> dict[str, tuple[str, ...]]:
+        """The unified (base + delta) tag vocabulary."""
+        return dict(self._vocab)
 
     @property
     def dim(self) -> int:
@@ -358,15 +428,30 @@ class MutableIndex:
         params: SearchParams | None = None,
         *,
         mesh=None,
+        filter: FilterExpr | None = None,
+        filter_params=None,
     ) -> search_mod.SearchResult:
         """Unified fresh+disk search over (base ∪ inserts − deletes).
 
         Lock-free: reads one immutable state snapshot, so it interleaves
         with writers and compaction without ever observing partial state.
+        ``filter`` applies to BOTH tiers: the base search pushes it into
+        the page scan (its own vocabulary), the delta scan masks rows
+        under the unified vocabulary — an insert is filterable before any
+        compaction.
         """
         s = self._state
         p = resolve_search_params(s.base.default_params, k, params)
         kwargs = {} if mesh is None else {"mesh": mesh}
+        delta_cf = None
+        if filter is not None:
+            kwargs.update(filter=filter, filter_params=filter_params)
+            # compiled eagerly (not only when the delta is non-empty) so a
+            # bad predicate fails the same way at any write load; against
+            # the SNAPSHOT's vocab so it matches the delta codes it scans
+            delta_cf = filter_mod.compile_filter(
+                filter, getattr(s.base, "schema", None), s.vocab or {}
+            )
 
         if s.tombstones.size == 0 and s.delta.n_live == 0:
             res = s.base.search(queries, params=p, **kwargs)
@@ -387,7 +472,9 @@ class MutableIndex:
         )
         base_ids = np.where(dead, PAD, ext)
 
-        delta_ids, delta_d = scan_delta(s.delta, np.asarray(queries), p.k)
+        delta_ids, delta_d = scan_delta(
+            s.delta, np.asarray(queries), p.k, cfilter=delta_cf
+        )
         ids, dists = search_mod.merge_topk_streams(
             jnp.asarray(base_ids.astype(np.int32)),
             jnp.asarray(base_d),
@@ -415,7 +502,11 @@ class MutableIndex:
 
     # -------------------------------------------------------------- writes
     def insert(
-        self, vectors: np.ndarray, ids: np.ndarray | None = None
+        self,
+        vectors: np.ndarray,
+        ids: np.ndarray | None = None,
+        *,
+        metadata=None,
     ) -> np.ndarray:
         """Append vectors to the delta tier; returns their external ids.
 
@@ -423,19 +514,42 @@ class MutableIndex:
         tombstoned / the previous delta row killed, and the new vector
         wins. May trigger an automatic ``compact()`` when the delta
         exceeds ``DeltaParams.compact_fraction`` of the base.
+
+        ``metadata`` (dict-of-columns or list-of-dicts, validated against
+        the base's :class:`MetadataSchema`) makes the new rows filterable
+        immediately. Unseen tag values extend the unified vocabulary
+        append-only, so existing codes — and the base tier's compiled
+        filters — stay valid until compaction re-encodes everything.
         """
         vectors = np.ascontiguousarray(vectors, np.float32).reshape(
             -1, self.dim
         )
+        columns = None
+        if metadata is not None:
+            schema = self.schema
+            if schema is None:
+                raise ValueError(
+                    "insert metadata= requires the base index to have a "
+                    "MetadataSchema (build it with schema=)"
+                )
+            columns = filter_mod.normalize_metadata(
+                schema, metadata, vectors.shape[0]
+            )
         with self._lock:
             s = self._state
+            tags = nums = None
+            if columns is not None:
+                enc = self._encode_with_unified_vocab(
+                    self.schema, columns, vectors.shape[0]
+                )
+                tags, nums = enc.tags, enc.nums
             if ids is None:
                 ids = np.arange(
                     self._next_id, self._next_id + vectors.shape[0],
                     dtype=np.int64,
                 )
             ids = np.asarray(ids, np.int64).reshape(-1)
-            self._delta.insert(vectors, ids)    # validates shape/dups
+            self._delta.insert(vectors, ids, tags=tags, nums=nums)
             self._next_id = max(self._next_id, int(ids.max()) + 1)
             in_base = np.isin(ids, s.base_ids)
             tombs = (
@@ -443,7 +557,9 @@ class MutableIndex:
                 if in_base.any() else s.tombstones
             )
             self._state = s._replace(
-                tombstones=tombs, delta=self._delta.snapshot()
+                tombstones=tombs,
+                delta=self._delta.snapshot(),
+                vocab=dict(self._vocab) if s.vocab is not None else None,
             )
             if (
                 self.auto_compact
@@ -451,6 +567,21 @@ class MutableIndex:
             ):
                 self._compact_locked()
         return ids
+
+    def _encode_with_unified_vocab(
+        self, schema, columns: dict, n: int
+    ) -> MetaArrays:
+        """Extend the unified vocabulary with unseen tag values (appended,
+        never reordered — base codes stay stable) and encode. Caller holds
+        the index lock."""
+        for f in schema.tags:
+            have = set(self._vocab.get(f, ()))
+            new = sorted(
+                {str(v) for v in columns.get(f, ()) if v is not None} - have
+            )
+            if new:
+                self._vocab[f] = self._vocab.get(f, ()) + tuple(new)
+        return filter_mod.encode_metadata(schema, self._vocab, columns, n)
 
     def delete(self, ids: np.ndarray) -> int:
         """Remove ids from the live set; returns how many were live.
@@ -512,8 +643,28 @@ class MutableIndex:
         merged_ids = np.concatenate(
             [s.base_ids[keep], s.delta.ids[:c][live]], axis=0
         )
-        new_base = type(s.base).build(merged_x, s.base.cfg)
-        self._delta = DeltaTier(self.dim, self.delta_params.min_capacity)
+        schema = getattr(s.base, "schema", None)
+        build_kwargs = {}
+        if schema is not None:
+            # decode both tiers to values (base under its vocab, delta
+            # under the unified one) and let the rebuild mint a fresh
+            # vocabulary — compaction is the code-space reclaim
+            base_cols = s.base.metadata_by_original_id()
+            delta_cols = filter_mod.decode_metadata(
+                schema, self._vocab,
+                MetaArrays(tags=s.delta.tags[:c], nums=s.delta.nums[:c]),
+            )
+            build_kwargs = dict(
+                schema=schema,
+                metadata={
+                    f: list(itertools.compress(base_cols[f], keep))
+                    + list(itertools.compress(delta_cols[f], live))
+                    for f in schema.fields
+                },
+            )
+        new_base = type(s.base).build(merged_x, s.base.cfg, **build_kwargs)
+        self._vocab = dict(getattr(new_base, "vocab", None) or {})
+        self._delta = self._new_delta(new_base)
         new_state = _MutableState(
             base=new_base,
             base_ids=merged_ids,
@@ -523,6 +674,7 @@ class MutableIndex:
             tombstones=np.empty((0,), np.int64),
             delta=self._delta.snapshot(),
             generation=s.generation + 1,
+            vocab=dict(self._vocab) if schema is not None else None,
         )
         if self._directory is not None:
             from repro.core import persist

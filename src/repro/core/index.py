@@ -22,6 +22,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import filter as filter_mod
 from repro.core import layout as layout_mod
 from repro.core import lsh as lsh_mod
 from repro.core import page_graph as pg_mod
@@ -30,11 +31,13 @@ from repro.core import search as search_mod
 from repro.core import vamana as vamana_mod
 from repro.core.config import (
     AdaptiveParams,
+    FilterParams,
     MemoryMode,
     PageANNConfig,
     SearchParams,
     resolve_search_params,
 )
+from repro.core.filter import FilterExpr, MetaArrays, MetadataSchema
 
 PAD = -1
 
@@ -89,6 +92,19 @@ class PageANNIndex:
     # resolves as this index's default SearchParams
     tuned: list = dataclasses.field(default_factory=list)
     tuned_default: SearchParams | None = None
+    # filtered search (``core.filter``): the declared metadata schema, the
+    # tag vocabularies (field -> tuple of values; codes are positions),
+    # slot-aligned device columns the page scan gathers masks from, and
+    # the original-order host copy (selectivity probe / brute-force
+    # oracle / compaction source). All None/empty without a schema.
+    schema: MetadataSchema | None = None
+    vocab: dict = dataclasses.field(default_factory=dict)
+    meta: MetaArrays | None = None
+    meta_host: MetaArrays | None = None
+    # per-FilterExpr compiled form + measured selectivity (host cache —
+    # compiling and probing once per distinct predicate, like the jit
+    # executable the static arg keys)
+    _filter_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------------ build
     @staticmethod
@@ -97,6 +113,8 @@ class PageANNIndex:
         cfg: PageANNConfig,
         mem_subspaces: int | None = None,
         warmup_queries: np.ndarray | None = None,
+        schema: MetadataSchema | None = None,
+        metadata=None,
     ) -> "PageANNIndex":
         x = np.ascontiguousarray(x, np.float32)
         n, d = x.shape
@@ -153,6 +171,25 @@ class PageANNIndex:
         )
         data = search_mod.make_search_data(store, tier, lsh)
 
+        # metadata columns: encode in original-id order, scatter to page-
+        # slot order alongside the member vectors
+        if metadata is not None and schema is None:
+            raise ValueError("metadata= requires a schema=")
+        vocab: dict = {}
+        meta = meta_host = None
+        if schema is not None:
+            columns = filter_mod.normalize_metadata(
+                schema, metadata if metadata is not None else {}, n
+            )
+            vocab = filter_mod.build_vocab(schema, columns)
+            meta_host = filter_mod.encode_metadata(schema, vocab, columns, n)
+            slot_tags, slot_nums = layout_mod.reassign_metadata(
+                meta_host.tags, meta_host.nums, store
+            )
+            meta = MetaArrays(
+                tags=jnp.asarray(slot_tags), nums=jnp.asarray(slot_nums)
+            )
+
         idx = PageANNIndex(
             cfg=cfg,
             store=store,
@@ -177,6 +214,10 @@ class PageANNIndex:
                 resident_pages=store.num_pages,
                 resident_bytes=store.num_pages * store.padded_tile_bytes(),
             ),
+            schema=schema,
+            vocab=vocab,
+            meta=meta,
+            meta_host=meta_host,
         )
         if warmup_queries is not None and cfg.cache_pages > 0:
             idx.warm_cache(warmup_queries)
@@ -227,7 +268,8 @@ class PageANNIndex:
 
     # ----------------------------------------------------------------- search
     def _raw_search(
-        self, q: jnp.ndarray, params: SearchParams, mesh=None
+        self, q: jnp.ndarray, params: SearchParams, mesh=None,
+        meta=None, cfilter=None,
     ) -> search_mod.SearchResult:
         if mesh is not None:
             if self.fetcher is not None:
@@ -241,6 +283,7 @@ class PageANNIndex:
                 mesh=mesh,
                 capacity=self.store.capacity,
                 mode=self.cfg.memory_mode.value,
+                meta=meta, cfilter=cfilter,
             )
         if self.fetcher is not None:
             return search_mod.stream_search(
@@ -248,11 +291,57 @@ class PageANNIndex:
                 capacity=self.store.capacity,
                 mode=self.cfg.memory_mode.value,
                 fetcher=self.fetcher,
+                meta=meta, cfilter=cfilter,
             )
         return search_mod.batch_search(
             q, self.data, params,
             capacity=self.store.capacity,
             mode=self.cfg.memory_mode.value,
+            meta=meta, cfilter=cfilter,
+        )
+
+    # ----------------------------------------------------------------- filter
+    def compiled_filter(self, expr: FilterExpr):
+        """Resolve a ``FilterExpr`` against this index's schema/vocab and
+        measure its selectivity (fraction of live vectors passing) over
+        the host metadata columns. Cached per expression — the compiled
+        form keys one jit executable, the selectivity drives the beam
+        oversampling. Returns (CompiledFilter, selectivity)."""
+        cached = self._filter_cache.get(expr)
+        if cached is not None:
+            return cached
+        cf = filter_mod.compile_filter(expr, self.schema, self.vocab)
+        mask = filter_mod.filter_mask_np(
+            cf, self.meta_host.tags, self.meta_host.nums
+        )
+        sel = float(mask.mean()) if mask.size else 0.0
+        self._filter_cache[expr] = (cf, sel)
+        return cf, sel
+
+    @staticmethod
+    def _filter_oversample(selectivity: float, cap: int) -> int:
+        """Pow2 beam-widening factor for a predicate's selectivity: a
+        filter passing 1/s of the corpus needs ~s× the frontier to
+        surface as many passing candidates as the unfiltered search —
+        bucketed to powers of two (bounded compiled shapes, like the
+        tombstone oversampling) and clamped to ``cap``."""
+        if selectivity <= 0.0:
+            return cap
+        need = 1.0 / selectivity
+        b = 1
+        while b < need and b < cap:
+            b *= 2
+        return min(b, cap)
+
+    def metadata_by_original_id(self) -> dict[str, list] | None:
+        """Decoded metadata columns in ORIGINAL id order (missing ->
+        None) — what a compaction merges with the delta tier's fresh
+        metadata before re-encoding under a new vocabulary. ``None``
+        when the index has no schema."""
+        if self.schema is None:
+            return None
+        return filter_mod.decode_metadata(
+            self.schema, self.vocab, self.meta_host
         )
 
     def fetch_stats(self) -> dict:
@@ -288,15 +377,37 @@ class PageANNIndex:
         params: SearchParams | None = None,
         *,
         mesh=None,
+        filter: FilterExpr | None = None,
+        filter_params: FilterParams | None = None,
     ) -> search_mod.SearchResult:
         """Search; returns ORIGINAL vector ids.
 
         ``params`` supplies the runtime knobs (defaults come from the build
         config); ``k`` overrides ``params.k`` when given. Passing a device
         mesh routes through ``shard_search`` (query batch split across it).
+
+        ``filter`` restricts results to vectors whose metadata satisfies
+        the predicate (see ``core.filter``): the compiled filter masks
+        non-passing members to ``+inf`` inside the page scan, and the
+        beam is widened by a pow2 factor of the predicate's measured
+        selectivity (bounded by
+        ``filter_params.max_filter_oversample``) so recall matches a
+        post-filter brute force. ``filter=None`` compiles and runs the
+        exact pre-filter program.
         """
         p = self.resolve_params(k, params)
-        res = self._raw_search(jnp.asarray(queries, jnp.float32), p, mesh=mesh)
+        meta = cfilter = None
+        if filter is not None:
+            fp = filter_params if filter_params is not None else FilterParams()
+            cfilter, sel = self.compiled_filter(filter)
+            factor = self._filter_oversample(sel, fp.max_filter_oversample)
+            if factor > 1:
+                p = p.replace(beam_width=p.beam_width * factor)
+            meta = self.meta
+        res = self._raw_search(
+            jnp.asarray(queries, jnp.float32), p, mesh=mesh,
+            meta=meta, cfilter=cfilter,
+        )
         return search_mod.SearchResult(
             ids=self.translate_ids(res.ids),
             dists=np.asarray(res.dists),

@@ -326,3 +326,40 @@ def reassigned_codes(
     """PQ-encode all vectors in reassigned order (padded slots encode 0)."""
     xr = reassigned_vectors(x, store)
     return np.asarray(pq_mod.pq_encode(jnp.asarray(xr), jnp.asarray(codebooks)))
+
+
+def reassign_metadata(tags: np.ndarray, nums: np.ndarray, store: PageStore):
+    """Scatter original-id metadata columns into page-slot order.
+
+    tags: (N, T) int32 codes, nums: (N, Nn) f32 — original id order (as
+    produced by ``filter.encode_metadata``). Returns the (P*cap, T) /
+    (P*cap, Nn) slot-aligned arrays the filtered page scan gathers from:
+    row ``page * capacity + slot`` holds the metadata of the vector the
+    page layout placed there, so a page's metadata is one contiguous
+    slice — the same ``new_to_old`` scatter the member vectors use. Pad
+    slots keep the missing sentinels (-1 tag code / NaN numeric), which
+    match no filter clause.
+    """
+    n2o = store.new_to_old
+    rows = n2o.shape[0]
+    out_tags = np.full((rows, tags.shape[1]), -1, np.int32)
+    out_nums = np.full((rows, nums.shape[1]), np.nan, np.float32)
+    valid = n2o != PAD
+    out_tags[valid] = tags[n2o[valid]]
+    out_nums[valid] = nums[n2o[valid]]
+    return out_tags, out_nums
+
+
+def unreassign_metadata(
+    slot_tags: np.ndarray, slot_nums: np.ndarray, store: PageStore
+):
+    """Inverse of :func:`reassign_metadata`: slot-aligned columns back to
+    original-id order (what ``load`` rebuilds the host copy from)."""
+    n2o = store.new_to_old
+    n = store.num_vectors
+    tags = np.full((n, slot_tags.shape[1]), -1, np.int32)
+    nums = np.full((n, slot_nums.shape[1]), np.nan, np.float32)
+    valid = n2o != PAD
+    tags[n2o[valid]] = slot_tags[valid]
+    nums[n2o[valid]] = slot_nums[valid]
+    return tags, nums

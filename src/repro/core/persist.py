@@ -55,6 +55,7 @@ VERSION = 1
 MANIFEST = "manifest.json"
 PAGES_BIN = "pages.bin"
 ARRAYS_NPZ = "arrays.npz"
+META_NPZ = "meta.npz"
 DELTA_NPZ = "delta.npz"
 BASE_SUBDIR = "base"
 
@@ -148,6 +149,83 @@ def _check_pages_bin(directory: str, doc: dict) -> str:
     return path
 
 
+def _schema_to_json(index) -> dict | None:
+    """The manifest ``schema`` section: field declaration + tag
+    vocabulary. ``None`` when the index carries no metadata."""
+    schema = getattr(index, "schema", None)
+    if schema is None:
+        return None
+    doc = schema.to_json()
+    doc["vocab"] = {f: list(vs) for f, vs in index.vocab.items()}
+    return doc
+
+
+def _load_meta(directory: str, doc: dict, store):
+    """Reconstruct (schema, vocab, meta, meta_host) from the manifest
+    ``schema`` section + ``meta.npz`` sidecar. The two must agree — a
+    sidecar swapped in from another collection (or a manifest edited by
+    hand) fails here as :class:`IndexFormatError`, not as a shape error
+    deep inside the first filtered search."""
+    from repro.core import filter as filter_mod
+    from repro.core.filter import MetaArrays, MetadataSchema
+
+    schema_doc = doc.get("schema")
+    path = os.path.join(directory, META_NPZ)
+    if schema_doc is None:
+        if os.path.isfile(path):
+            raise IndexFormatError(
+                f"{path}: metadata sidecar present but the manifest has "
+                "no schema section"
+            )
+        return None, {}, None, None
+    if not os.path.isfile(path):
+        raise IndexFormatError(
+            f"{path}: manifest declares a metadata schema but the "
+            "metadata sidecar is missing"
+        )
+    try:
+        schema = MetadataSchema.from_json(schema_doc)
+        vocab = {
+            f: tuple(vs) for f, vs in schema_doc.get("vocab", {}).items()
+        }
+    except (TypeError, ValueError, AttributeError) as e:
+        raise IndexFormatError(
+            f"{directory}: garbled manifest schema section: {e}"
+        )
+    unknown = sorted(set(vocab) - set(schema.tags))
+    if unknown:
+        raise IndexFormatError(
+            f"{directory}: manifest vocab names fields not in the "
+            f"schema: {unknown}"
+        )
+    with np.load(path) as z:
+        if not {"tags", "nums"} <= set(z.files):
+            raise IndexFormatError(
+                f"{path}: metadata sidecar is missing arrays "
+                f"(found {sorted(z.files)}, need ['nums', 'tags'])"
+            )
+        slot_tags = np.asarray(z["tags"], np.int32)
+        slot_nums = np.asarray(z["nums"], np.float32)
+    rows = int(np.asarray(store.new_to_old).shape[0])  # pages * capacity
+    want_tags = (rows, len(schema.tags))
+    want_nums = (rows, len(schema.numerics))
+    if slot_tags.shape != want_tags or slot_nums.shape != want_nums:
+        raise IndexFormatError(
+            f"{path}: metadata shapes {slot_tags.shape}/{slot_nums.shape} "
+            f"disagree with the manifest schema — expected "
+            f"{want_tags}/{want_nums}"
+        )
+    host_tags, host_nums = layout_mod.unreassign_metadata(
+        slot_tags, slot_nums, store
+    )
+    return (
+        schema,
+        vocab,
+        MetaArrays(tags=jnp.asarray(slot_tags), nums=jnp.asarray(slot_nums)),
+        MetaArrays(tags=host_tags, nums=host_nums),
+    )
+
+
 def config_to_json(cfg: PageANNConfig) -> dict:
     doc = dataclasses.asdict(cfg)
     doc["memory_mode"] = cfg.memory_mode.value
@@ -200,6 +278,15 @@ def save_pageann(index, directory: str) -> None:
         lsh_sample_codes=np.asarray(lsh.sample_codes),
         lsh_sample_pq=np.asarray(lsh.sample_pq),
     )
+    if getattr(index, "schema", None) is not None:
+        # page-slot-aligned metadata columns ride their own sidecar: the
+        # same row order as pages.bin, so a page's metadata is one
+        # contiguous slice at the page's slot offsets
+        np.savez(
+            os.path.join(directory, META_NPZ),
+            tags=np.asarray(index.meta.tags, np.int32),
+            nums=np.asarray(index.meta.nums, np.float32),
+        )
 
     pages, rows, lanes = recs.shape
     write_manifest(
@@ -233,6 +320,9 @@ def save_pageann(index, directory: str) -> None:
             # {params, recall, qps, ...} entries plus which one serving
             # should resolve as the default SearchParams
             tuned=_tuned_to_json(index),
+            # metadata declaration + tag vocabulary (None: no metadata);
+            # the encoded columns themselves live in meta.npz
+            schema=_schema_to_json(index),
         ),
     )
 
@@ -389,6 +479,7 @@ def load_pageann(directory: str, *, memory_budget=None):
     stats.resident_pages = store.resident_pages
     stats.resident_bytes = store.resident_bytes
     tuned, tuned_default = _tuned_from_json(doc.get("tuned"))
+    schema, vocab, meta, meta_host = _load_meta(directory, doc, store)
     return PageANNIndex(
         cfg=cfg,
         store=store,
@@ -401,6 +492,10 @@ def load_pageann(directory: str, *, memory_budget=None):
         memory_budget=memory_budget,
         tuned=tuned,
         tuned_default=tuned_default,
+        schema=schema,
+        vocab=vocab,
+        meta=meta,
+        meta_host=meta_host,
     )
 
 
@@ -414,6 +509,12 @@ def save_mutable(state, directory: str) -> None:
     state.base.save(os.path.join(directory, BASE_SUBDIR))
     dv = state.delta
     c = dv.count
+    extra = {}
+    if getattr(state.base, "schema", None) is not None:
+        extra = dict(
+            delta_tags=np.asarray(dv.tags[:c], np.int32),
+            delta_nums=np.asarray(dv.nums[:c], np.float32),
+        )
     np.savez(
         os.path.join(directory, DELTA_NPZ),
         delta_vecs=np.asarray(dv.vecs[:c], np.float32),
@@ -421,6 +522,7 @@ def save_mutable(state, directory: str) -> None:
         delta_live=np.asarray(dv.live[:c], bool),
         tombstones=np.asarray(state.tombstones, np.int64),
         base_ids=np.asarray(state.base_ids, np.int64),
+        **extra,
     )
     write_manifest(
         directory,
@@ -435,6 +537,12 @@ def save_mutable(state, directory: str) -> None:
             delta_rows=int(c),
             delta_live=int(dv.n_live),
             tombstones=int(state.tombstones.size),
+            # the UNIFIED vocabulary (base + values seen only in delta
+            # inserts) — delta tag codes are positions in these tuples
+            vocab=(
+                {f: list(vs) for f, vs in state.vocab.items()}
+                if state.vocab is not None else None
+            ),
         ),
     )
 
@@ -500,15 +608,26 @@ def load_mutable(directory: str, *, memory_budget=None):
         tier._vecs[:c] = arrays["delta_vecs"]
         tier._ids[:c] = arrays["delta_ids"]
         tier._live[:c] = live
+        if "delta_tags" in arrays:
+            tier._tags[:c] = arrays["delta_tags"]
+            tier._nums[:c] = arrays["delta_nums"]
         tier._count = c
         tier._slot_of = {
             int(arrays["delta_ids"][i]): i for i in range(c) if live[i]
         }
         tier._view = None
+    vocab_doc = doc.get("vocab")
+    if vocab_doc is not None:
+        # the persisted UNIFIED vocabulary supersedes the base's copy the
+        # constructor installed — delta tag codes index into this one
+        index._vocab = {f: tuple(vs) for f, vs in vocab_doc.items()}
     index._state = index._state._replace(
         tombstones=np.asarray(arrays["tombstones"], np.int64),
         delta=index._delta.snapshot(),
         generation=int(doc.get("generation", 0)),
+        vocab=dict(index._vocab) if vocab_doc is not None else (
+            index._state.vocab
+        ),
     )
     index._next_id = int(
         max(

@@ -49,6 +49,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import compat
 from repro.core import pq as pq_mod
 from repro.core.config import MemoryMode, SearchParams
+from repro.core.filter import CompiledFilter, MetaArrays, filter_mask
 from repro.core.layout import MemoryTier, PageStore
 from repro.core.lsh import LSHIndex, hash_codes
 from repro.kernels import ops
@@ -291,6 +292,26 @@ def select_batch(
     return state._replace(cand_vis=cand_vis, page_vis=page_vis), batch
 
 
+def page_member_mask(
+    meta: MetaArrays, cfilter: CompiledFilter, batch: jnp.ndarray,
+    *, capacity: int,
+) -> jnp.ndarray:
+    """Evaluate a compiled filter over one hop's page batch.
+
+    ``meta`` holds page-slot-aligned metadata columns ((P*cap, T) tags /
+    (P*cap, N) numerics — the same ``new_to_old`` layout the page records
+    use), so a page's rows are one contiguous slice: gather the (b,)
+    batch and evaluate the predicate to a (b, cap) f32 mask (1 = passes).
+    Pad slots carry the missing sentinels (-1 / NaN) and never pass.
+    """
+    # explicit page count: a zero-width column block (schema with no tag
+    # or no numeric fields) cannot infer it from a -1 reshape
+    pages = meta.tags.shape[0] // capacity
+    tags = meta.tags.reshape(pages, capacity, meta.tags.shape[-1])[batch]
+    nums = meta.nums.reshape(pages, capacity, meta.nums.shape[-1])[batch]
+    return filter_mask(cfilter, tags, nums).astype(jnp.float32)
+
+
 def score_page_batch(
     q: jnp.ndarray,
     data: SearchData,
@@ -302,6 +323,8 @@ def score_page_batch(
     capacity: int,
     mode: str,
     fetch=None,
+    meta: MetaArrays | None = None,
+    cfilter: CompiledFilter | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Batched page-record read (Fig. 6 steps 2-4, THE I/O) -> both score
     sets from one DMA per page.
@@ -326,6 +349,15 @@ def score_page_batch(
     ``fetch=None`` (fully resident) keeps the one-array fused scan
     untouched.
 
+    With a filter bound (``meta`` + ``cfilter``), the predicate is
+    evaluated over the batch's page-slot-aligned metadata and pushed into
+    the scan as a member mask: filtered-out members score ``+inf`` INSIDE
+    the kernel, so the running result top-k only ever holds passing
+    candidates. Neighbor ADC estimates stay unmasked — the graph must
+    remain traversable through filtered-out regions to reach passing
+    ones. With no filter both are ``None`` and the traced program is the
+    exact pre-filter one.
+
     Returns (member_ids, member_dists) flattened to (b*cap,),
     (neighbor_ids, estimated_dists) flattened to (b*Rp,) and INF-masked,
     plus this hop's disk-I/O and cache-hit deltas.
@@ -335,11 +367,17 @@ def score_page_batch(
     safe = jnp.maximum(batch, 0)
     fetched = batch >= 0
 
+    member_mask = (
+        page_member_mask(meta, cfilter, safe, capacity=cap)
+        if meta is not None and cfilter is not None
+        else None
+    )
     compute_adc = mode != MemoryMode.MEM_ALL.value
     if fetch is None:
         ex, est_disk = ops.page_scan(
             data.page_recs, safe, q, disk_lut,
             capacity=cap, dim=q.shape[0], rp=rp, compute_adc=compute_adc,
+            member_mask=member_mask,
         )
     else:
         slot = data.resident_map[safe]                  # (b,)
@@ -349,13 +387,17 @@ def score_page_batch(
         # zero record whose scores are discarded by the per-lane merge /
         # downstream validity masks
         staged = fetch(jnp.where(fetched & ~resident, safe, PAD))
+        # the mask is a function of the page id alone, so the SAME (b,
+        # cap) mask applies to the resident and staged lanes of the hop
         ex_r, est_r = ops.page_scan(
             data.page_recs, jnp.where(resident, slot, 0), q, disk_lut,
             capacity=cap, dim=q.shape[0], rp=rp, compute_adc=compute_adc,
+            member_mask=member_mask,
         )
         ex_s, est_s = ops.page_scan_recs(
             staged, q, disk_lut,
             capacity=cap, dim=q.shape[0], rp=rp, compute_adc=compute_adc,
+            member_mask=member_mask,
         )
         ex = jnp.where(resident[:, None], ex_r, ex_s)
         est_disk = (
@@ -483,6 +525,8 @@ def _search_one(
     epsilon: float = 0.0,
     entry_slack: int | None = None,
     min_entries: int = 1,
+    meta: MetaArrays | None = None,
+    cfilter: CompiledFilter | None = None,
 ):
     disk_lut = pq_mod.pq_lut(q, data.disk_codebooks)  # (M_disk, ksub)
     # the finer in-memory LUT is dead weight in DISK_ONLY mode — skip it
@@ -517,6 +561,7 @@ def _search_one(
         mids, md, nids, nd, io_delta, hit_delta = score_page_batch(
             q, data, batch, state, disk_lut, mem_lut,
             capacity=capacity, mode=mode, fetch=fetch,
+            meta=meta, cfilter=cfilter,
         )
         return merge(
             state, mids, md, nids, nd, io_delta, hit_delta,
@@ -544,6 +589,8 @@ def _batch_search_impl(
     epsilon: float = 0.0,
     entry_slack: int | None = None,
     min_entries: int = 1,
+    meta: MetaArrays | None = None,
+    cfilter: CompiledFilter | None = None,
 ) -> SearchResult:
     fn = functools.partial(
         _search_one,
@@ -560,6 +607,8 @@ def _batch_search_impl(
         epsilon=epsilon,
         entry_slack=entry_slack,
         min_entries=min_entries,
+        meta=meta,
+        cfilter=cfilter,
     )
     ids, dists, ios, hops, hits = jax.vmap(fn)(queries, valid)
     return SearchResult(ids=ids, dists=dists, ios=ios, hops=hops, cache_hits=hits)
@@ -589,7 +638,7 @@ def _impl_kwargs(params: SearchParams, capacity: int, mode: str) -> dict:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("params", "capacity", "mode")
+    jax.jit, static_argnames=("params", "capacity", "mode", "cfilter")
 )
 def batch_search(
     queries: jnp.ndarray,
@@ -598,6 +647,8 @@ def batch_search(
     *,
     capacity: int,
     mode: str,
+    meta: MetaArrays | None = None,
+    cfilter: CompiledFilter | None = None,
 ) -> SearchResult:
     """Search a batch of queries. queries: (Q, d).
 
@@ -606,10 +657,18 @@ def batch_search(
     argument: each distinct ``SearchParams`` value keys one compiled
     executable over the same built index. ``capacity`` and ``mode`` are
     build-time properties of the index artifact.
+
+    Filtered search binds ``meta`` (page-slot-aligned metadata columns, a
+    dynamic pytree) and ``cfilter`` (the compiled predicate — frozen
+    tuples, another static arg, so each distinct predicate keys its own
+    executable). Both default to ``None``, and because ``meta`` is an
+    argument rather than a ``SearchData`` field, the no-filter call keeps
+    the exact pre-filter jit signature and traces the identical program.
     """
     valid = jnp.ones((queries.shape[0],), bool)
     return _batch_search_impl(
-        queries, data, valid, **_impl_kwargs(params, capacity, mode)
+        queries, data, valid, meta=meta, cfilter=cfilter,
+        **_impl_kwargs(params, capacity, mode),
     )
 
 
@@ -618,15 +677,20 @@ def batch_search(
 # --------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=32)
-def _stream_search_fn(fetcher, params: SearchParams, capacity: int, mode: str):
+def _stream_search_fn(
+    fetcher, params: SearchParams, capacity: int, mode: str,
+    cfilter: CompiledFilter | None = None,
+):
     """jitted streaming search bound to one host fetcher.
 
-    Cached per (fetcher, params, capacity, mode): the fetcher is baked
-    into the executable as the hop body's host callback, so two streamed
-    indexes never share a compiled closure — mirrored in the serving
-    layer's compile-cache key (``serve.compile_cache.geometry_of``). The
-    fetcher participates in the lru key by identity, which is exactly the
-    sharing rule we want.
+    Cached per (fetcher, params, capacity, mode, cfilter): the fetcher is
+    baked into the executable as the hop body's host callback, so two
+    streamed indexes never share a compiled closure — mirrored in the
+    serving layer's compile-cache key
+    (``serve.compile_cache.geometry_of``). The fetcher participates in
+    the lru key by identity, which is exactly the sharing rule we want;
+    the compiled filter (frozen tuples) participates by value, one
+    executable per distinct predicate.
     """
     from repro.core import compat
 
@@ -641,8 +705,11 @@ def _stream_search_fn(fetcher, params: SearchParams, capacity: int, mode: str):
         )
 
     @jax.jit
-    def fn(queries, data, valid):
-        return _batch_search_impl(queries, data, valid, fetch=fetch, **kwargs)
+    def fn(queries, data, valid, meta=None):
+        return _batch_search_impl(
+            queries, data, valid, fetch=fetch, meta=meta, cfilter=cfilter,
+            **kwargs,
+        )
 
     return fn
 
@@ -655,6 +722,8 @@ def stream_search(
     capacity: int,
     mode: str,
     fetcher,
+    meta: MetaArrays | None = None,
+    cfilter: CompiledFilter | None = None,
 ) -> SearchResult:
     """``batch_search`` over a budgeted index: ``data.page_recs`` holds
     only the resident page subset, and each hop's misses are pulled from
@@ -671,9 +740,9 @@ def stream_search(
     queries in the body until the whole batch exits, and their discarded
     hops still fetch.)
     """
-    fn = _stream_search_fn(fetcher, params, capacity, mode)
+    fn = _stream_search_fn(fetcher, params, capacity, mode, cfilter)
     valid = jnp.ones((queries.shape[0],), bool)
-    return fn(queries, data, valid)
+    return fn(queries, data, valid, meta)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -708,11 +777,17 @@ def merge_topk_streams(
 # --------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=32)
-def _shard_search_fn(mesh, params: SearchParams, capacity: int, mode: str):
+def _shard_search_fn(
+    mesh, params: SearchParams, capacity: int, mode: str,
+    cfilter: CompiledFilter | None = None, with_meta: bool = False,
+):
     """jitted shard_map: queries split over every mesh axis, data replicated.
 
-    Cached per (mesh, params, capacity, mode) so repeated serving calls
-    reuse the compiled executable.
+    Cached per (mesh, params, capacity, mode, cfilter, with_meta) so
+    repeated serving calls reuse the compiled executable. Filtered
+    dispatches replicate the metadata columns like the index arrays
+    (``with_meta``); the no-filter entry builds the exact pre-filter
+    shard_map signature.
     """
     axes = tuple(mesh.axis_names)
     local = functools.partial(
@@ -721,12 +796,23 @@ def _shard_search_fn(mesh, params: SearchParams, capacity: int, mode: str):
     data_spec = jax.tree.map(
         lambda _: P(), SearchData(*[0] * len(SearchData._fields))
     )
-    fn = compat.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(axes), data_spec, P(axes)),
-        out_specs=P(axes),
-    )
+    if with_meta:
+        def local_meta(queries, data, valid, meta):
+            return local(queries, data, valid, meta=meta, cfilter=cfilter)
+
+        fn = compat.shard_map(
+            local_meta,
+            mesh=mesh,
+            in_specs=(P(axes), data_spec, P(axes), MetaArrays(P(), P())),
+            out_specs=P(axes),
+        )
+    else:
+        fn = compat.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axes), data_spec, P(axes)),
+            out_specs=P(axes),
+        )
     return jax.jit(fn)
 
 
@@ -738,6 +824,8 @@ def shard_search(
     mesh=None,
     capacity: int,
     mode: str,
+    meta: MetaArrays | None = None,
+    cfilter: CompiledFilter | None = None,
 ) -> SearchResult:
     """``batch_search`` with the query batch sharded across a device mesh.
 
@@ -756,7 +844,9 @@ def shard_search(
         from repro.launch.mesh import make_host_mesh
 
         mesh = make_host_mesh()
-    fn = _shard_search_fn(mesh, params, capacity, mode)
+    fn = _shard_search_fn(
+        mesh, params, capacity, mode, cfilter, meta is not None
+    )
     num_dev = 1
     for n in mesh.shape.values():
         num_dev *= n
@@ -768,7 +858,9 @@ def shard_search(
             [queries, jnp.zeros((pad, queries.shape[1]), queries.dtype)]
         )
         valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
-    res = fn(queries, data, valid)
+    res = fn(queries, data, valid, meta) if meta is not None else fn(
+        queries, data, valid
+    )
     if pad:
         res = jax.tree.map(lambda a: a[:qn], res)
     return res

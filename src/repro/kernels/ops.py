@@ -64,7 +64,7 @@ def page_gather_l2(pages, page_ids, q, *, impl: str | None = None,
     return ref.page_gather_l2_ref(pages, page_ids, q)
 
 
-def delta_scan(q, vecs, live, k: int, *, impl: str | None = None,
+def delta_scan(q, vecs, live, k: int, *, mask=None, impl: str | None = None,
                interpret: bool = False):
     """Brute-force scan of the mutable index's in-memory delta tier.
 
@@ -72,45 +72,57 @@ def delta_scan(q, vecs, live, k: int, *, impl: str | None = None,
     two), live: (C,) bool row-validity mask. Routes the distance matrix
     through the batched L2 kernel path (``l2dist`` on TPU, jnp oracle
     elsewhere), masks dead/padded rows to INF, and selects the per-query
-    ascending top-k with ``lax.top_k``. Returns (dists (Q, k) f32,
-    slots (Q, k) int32 row indices into ``vecs``); non-finite entries mean
-    fewer than k live rows.
+    ascending top-k with ``lax.top_k``. ``mask`` (C,) bool is the
+    filtered-search predicate over delta rows — rows failing it score INF
+    exactly like dead rows (None leaves the program unchanged). Returns
+    (dists (Q, k) f32, slots (Q, k) int32 row indices into ``vecs``);
+    non-finite entries mean fewer than k live rows.
     """
     d = l2_distance(q, vecs, impl=impl, interpret=interpret)
-    d = jnp.where(live[None, :], d, jnp.inf)
+    keep = live if mask is None else live & mask
+    d = jnp.where(keep[None, :], d, jnp.inf)
     neg, slots = jax.lax.top_k(-d, k)
     return -neg, slots.astype(jnp.int32)
 
 
 def page_scan(recs, page_ids, q, lut, *, capacity: int, dim: int, rp: int,
-              compute_adc: bool = True, impl: str | None = None,
-              interpret: bool = False):
-    """Fused per-page scan: one record DMA -> (member L2, neighbor ADC)."""
+              compute_adc: bool = True, member_mask=None,
+              impl: str | None = None, interpret: bool = False):
+    """Fused per-page scan: one record DMA -> (member L2, neighbor ADC).
+
+    ``member_mask`` (b, capacity) f32 pushes a filter predicate into the
+    scan — members with mask <= 0 score +inf (None: unmasked program,
+    unchanged)."""
     if _resolve(impl) == "pallas":
         return ps_k.page_scan(
             recs, page_ids, q, lut,
             capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+            member_mask=member_mask,
             interpret=interpret or not _on_tpu(),
         )
     return ref.page_scan_ref(
         recs, page_ids, q, lut,
         capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+        member_mask=member_mask,
     )
 
 
 def page_scan_recs(recs_b, q, lut, *, capacity: int, dim: int, rp: int,
-                   compute_adc: bool = True, impl: str | None = None,
-                   interpret: bool = False):
+                   compute_adc: bool = True, member_mask=None,
+                   impl: str | None = None, interpret: bool = False):
     """Fused scan on an already-staged (b, rows, 128) record batch — the
     streaming tier's scoring half (resident gathers + host-fetched misses
-    merged upstream). Scores match ``page_scan`` bit for bit."""
+    merged upstream). Scores match ``page_scan`` bit for bit; the same
+    ``member_mask`` applies (the mask is per page, not per origin)."""
     if _resolve(impl) == "pallas":
         return ps_k.page_scan_recs(
             recs_b, q, lut,
             capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+            member_mask=member_mask,
             interpret=interpret or not _on_tpu(),
         )
     return ref.page_scan_recs_ref(
         recs_b, q, lut,
         capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+        member_mask=member_mask,
     )

@@ -123,6 +123,56 @@ def _page_scan_recs_members_kernel(recs_ref, q_ref, md_ref, *, cap, dim):
     md_ref[...] = _member_l2(rec, q_ref[...].astype(jnp.float32), cap, dim)
 
 
+# Masked variants — the filtered-search path. A (1, capacity) f32 mask row
+# rides the same grid step as its record; members with mask <= 0 score
+# +inf IN the kernel, so the hop's running top-k only ever holds passing
+# candidates. Neighbor ADC is untouched: traversal must pass through
+# filtered-out regions. Separate kernels (not a flag on the plain ones)
+# keep the no-filter program byte-identical to the pre-filter build.
+def _mask_inf(md, mask):
+    return jnp.where(mask > 0, md, jnp.float32(jnp.inf))
+
+
+def _page_scan_masked_kernel(ids_ref, recs_ref, q_ref, lut_ref, mask_ref,
+                             md_ref, nd_ref, *, cap, dim, m):
+    del ids_ref
+    rec = recs_ref[...].astype(jnp.float32)
+    qt = q_ref[...].astype(jnp.float32)
+    md_ref[...] = _mask_inf(_member_l2(rec, qt, cap, dim), mask_ref[...])
+    nd_ref[...] = _neighbor_adc(
+        rec, lut_ref[...].astype(jnp.float32), _member_rows(cap, dim), m
+    )
+
+
+def _page_scan_members_masked_kernel(ids_ref, recs_ref, q_ref, mask_ref,
+                                     md_ref, *, cap, dim):
+    del ids_ref
+    rec = recs_ref[...].astype(jnp.float32)
+    md_ref[...] = _mask_inf(
+        _member_l2(rec, q_ref[...].astype(jnp.float32), cap, dim),
+        mask_ref[...],
+    )
+
+
+def _page_scan_recs_masked_kernel(recs_ref, q_ref, lut_ref, mask_ref,
+                                  md_ref, nd_ref, *, cap, dim, m):
+    rec = recs_ref[...].astype(jnp.float32)
+    qt = q_ref[...].astype(jnp.float32)
+    md_ref[...] = _mask_inf(_member_l2(rec, qt, cap, dim), mask_ref[...])
+    nd_ref[...] = _neighbor_adc(
+        rec, lut_ref[...].astype(jnp.float32), _member_rows(cap, dim), m
+    )
+
+
+def _page_scan_recs_members_masked_kernel(recs_ref, q_ref, mask_ref, md_ref,
+                                          *, cap, dim):
+    rec = recs_ref[...].astype(jnp.float32)
+    md_ref[...] = _mask_inf(
+        _member_l2(rec, q_ref[...].astype(jnp.float32), cap, dim),
+        mask_ref[...],
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("capacity", "dim", "rp", "compute_adc", "interpret")
 )
@@ -136,9 +186,12 @@ def page_scan_recs(
     rp: int,
     compute_adc: bool = True,
     interpret: bool = False,
+    member_mask: jnp.ndarray | None = None,
 ):
     """``page_scan`` on an ALREADY-staged record batch: recs_b (b, rows,
-    128) f32, q: (d,), lut: (M_disk, K) f32.
+    128) f32, q: (d,), lut: (M_disk, K) f32, member_mask: optional
+    (b, capacity) f32 filter mask (<= 0 members score +inf in-kernel;
+    None dispatches the unmasked kernels, whose program is unchanged).
 
     The scoring half of the fused scan for the streaming page tier: the
     hop's records arrive as a dense batch (resident gathers merged with
@@ -165,7 +218,23 @@ def page_scan_recs(
         )
     rec_spec = pl.BlockSpec((1, rows, lanes), lambda i: (i, 0, 0))
     q_spec = pl.BlockSpec(qt.shape, lambda i: (0, 0))
+    mask_spec = pl.BlockSpec((1, capacity), lambda i: (i, 0))
+    if member_mask is not None:
+        member_mask = member_mask.astype(jnp.float32)
     if not compute_adc:
+        if member_mask is not None:
+            md = pl.pallas_call(
+                functools.partial(
+                    _page_scan_recs_members_masked_kernel,
+                    cap=capacity, dim=dim,
+                ),
+                grid=(b,),
+                in_specs=[rec_spec, q_spec, mask_spec],
+                out_specs=pl.BlockSpec((1, capacity), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((b, capacity), jnp.float32),
+                interpret=interpret,
+            )(recs_b, qt, member_mask)
+            return md, None
         md = pl.pallas_call(
             functools.partial(
                 _page_scan_recs_members_kernel, cap=capacity, dim=dim
@@ -177,6 +246,29 @@ def page_scan_recs(
             interpret=interpret,
         )(recs_b, qt)
         return md, None
+    if member_mask is not None:
+        md, nd = pl.pallas_call(
+            functools.partial(
+                _page_scan_recs_masked_kernel, cap=capacity, dim=dim, m=m
+            ),
+            grid=(b,),
+            in_specs=[
+                rec_spec,
+                q_spec,
+                pl.BlockSpec(lut.shape, lambda i: (0, 0)),
+                mask_spec,
+            ],
+            out_specs=[
+                pl.BlockSpec((1, capacity), lambda i: (i, 0)),
+                pl.BlockSpec((1, LANES), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((b, capacity), jnp.float32),
+                jax.ShapeDtypeStruct((b, LANES), jnp.float32),
+            ],
+            interpret=interpret,
+        )(recs_b, qt, lut.astype(jnp.float32), member_mask)
+        return md, nd[:, :rp]
     md, nd = pl.pallas_call(
         functools.partial(_page_scan_recs_kernel, cap=capacity, dim=dim, m=m),
         grid=(b,),
@@ -212,9 +304,13 @@ def page_scan(
     rp: int,
     compute_adc: bool = True,
     interpret: bool = False,
+    member_mask: jnp.ndarray | None = None,
 ):
     """recs: (P, rows, 128) packed page records, page_ids: (b,) int32 in
-    [0, P), q: (d,), lut: (M_disk, K) f32 query LUT.
+    [0, P), q: (d,), lut: (M_disk, K) f32 query LUT, member_mask:
+    optional (b, capacity) f32 filter mask — per BATCH position (already
+    gathered for the hop's pages), not per store page; <= 0 members
+    score +inf in-kernel. None dispatches the unmasked kernels.
 
     -> (member_d (b, capacity) f32, nbr_d (b, rp) f32 or None)
 
@@ -239,7 +335,26 @@ def page_scan(
         )
     rec_spec = pl.BlockSpec((1, rows, lanes), lambda i, ids: (ids[i], 0, 0))
     q_spec = pl.BlockSpec(qt.shape, lambda i, ids: (0, 0))
+    mask_spec = pl.BlockSpec((1, capacity), lambda i, ids: (i, 0))
+    if member_mask is not None:
+        member_mask = member_mask.astype(jnp.float32)
     if not compute_adc:
+        if member_mask is not None:
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(b,),
+                in_specs=[rec_spec, q_spec, mask_spec],
+                out_specs=pl.BlockSpec((1, capacity), lambda i, ids: (i, 0)),
+            )
+            md = pl.pallas_call(
+                functools.partial(
+                    _page_scan_members_masked_kernel, cap=capacity, dim=dim
+                ),
+                grid_spec=grid_spec,
+                out_shape=jax.ShapeDtypeStruct((b, capacity), jnp.float32),
+                interpret=interpret,
+            )(page_ids.astype(jnp.int32), recs, qt, member_mask)
+            return md, None
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b,),
@@ -253,6 +368,35 @@ def page_scan(
             interpret=interpret,
         )(page_ids.astype(jnp.int32), recs, qt)
         return md, None
+
+    if member_mask is not None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b,),
+            in_specs=[
+                rec_spec,
+                q_spec,
+                pl.BlockSpec(lut.shape, lambda i, ids: (0, 0)),
+                mask_spec,
+            ],
+            out_specs=[
+                pl.BlockSpec((1, capacity), lambda i, ids: (i, 0)),
+                pl.BlockSpec((1, LANES), lambda i, ids: (i, 0)),
+            ],
+        )
+        md, nd = pl.pallas_call(
+            functools.partial(
+                _page_scan_masked_kernel, cap=capacity, dim=dim, m=m
+            ),
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((b, capacity), jnp.float32),
+                jax.ShapeDtypeStruct((b, LANES), jnp.float32),
+            ],
+            interpret=interpret,
+        )(page_ids.astype(jnp.int32), recs, qt, lut.astype(jnp.float32),
+          member_mask)
+        return md, nd[:, :rp]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -64,6 +64,7 @@ def page_scan_recs_ref(
     dim: int,
     rp: int,
     compute_adc: bool = True,
+    member_mask: jnp.ndarray | None = None,
 ):
     """``page_scan_ref`` on records that are ALREADY gathered/staged.
 
@@ -73,6 +74,11 @@ def page_scan_recs_ref(
     on device + host-fetched misses) can score a mixed-origin batch.
     ``page_scan_ref`` routes through here, so the two are bit-identical by
     construction — the streaming path's guarantee.
+
+    ``member_mask`` (b, capacity) f32: members with mask <= 0 score
+    ``+inf`` — filtered search pushes its predicate into the scan here.
+    Neighbor ADC is never masked: the graph must stay traversable
+    through filtered-out regions.
     -> (member_d (b, capacity) f32, nbr_d (b, rp) f32 or None).
     """
     b = recs_b.shape[0]
@@ -89,6 +95,8 @@ def page_scan_recs_ref(
         ]
     diff = vecs.astype(jnp.float32) - q.astype(jnp.float32)[None, None, :]
     member_d = (diff * diff).sum(-1)
+    if member_mask is not None:
+        member_d = jnp.where(member_mask > 0, member_d, jnp.inf)
     if not compute_adc:
         return member_d, None
     m = lut.shape[0]
@@ -109,15 +117,18 @@ def page_scan_ref(
     dim: int,
     rp: int,
     compute_adc: bool = True,
+    member_mask: jnp.ndarray | None = None,
 ):
     """Fused page scan: one packed-record gather, both score sets.
 
     recs: (P, rows, 128) f32 packed page records (see
     ``core.layout.pack_page_records``), page_ids: (b,) int32 (>=0),
-    q: (d,), lut: (M_disk, K) f32.
+    q: (d,), lut: (M_disk, K) f32, member_mask: optional (b, capacity)
+    f32 filter mask (<= 0 scores +inf; see ``page_scan_recs_ref``).
     -> (member_d (b, capacity) f32, nbr_d (b, rp) f32 or None).
     """
     return page_scan_recs_ref(
         recs[page_ids], q, lut,
         capacity=capacity, dim=dim, rp=rp, compute_adc=compute_adc,
+        member_mask=member_mask,
     )

@@ -28,10 +28,15 @@ end to end: the prompt embeddings are INSERTED as fresh documents through
 ``engine.insert``, retrieved back (each prompt now finds itself), then
 DELETED again — the serving process takes writes without an index rebuild.
 
+``--semantic-cache THRESHOLD`` (with ``--db-dir``) puts a
+``repro.serve.SemanticCache`` in front of the service and replays the
+prompt retrievals to demonstrate similarity hits: repeat queries within
+the cosine threshold of an answered one skip the dispatch entirely.
+
 Usage (CPU smoke; --arch defaults to granite-3-2b):
   PYTHONPATH=src python -m repro.launch.serve --smoke \
       --batch 4 --prompt-len 32 --gen 16 [--index-dir idx.pageann] \
-      [--mutable] [--db-dir db/ [--route :wiki,:notes]]
+      [--mutable] [--db-dir db/ [--route :wiki,:notes] [--semantic-cache 0.98]]
 """
 from __future__ import annotations
 
@@ -102,6 +107,14 @@ def main(argv=None):
              "results. Default: fully resident",
     )
     ap.add_argument(
+        "--semantic-cache", type=float, default=None, metavar="THRESHOLD",
+        help="(with --db-dir) put a semantic query cache in front of the "
+             "service: repeat prompt embeddings within this cosine "
+             "similarity of an answered one are served from the cache "
+             "instead of dispatching (e.g. 0.98). Hit/miss counters are "
+             "printed with the metrics. Default: no cache",
+    )
+    ap.add_argument(
         "--recall-target", type=float, default=None,
         help="serve the index with the autotuned operating point meeting "
              "this recall (the manifest 'tuned' section written by "
@@ -127,15 +140,23 @@ def main(argv=None):
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, arch.vocab_size
     )
 
-    if args.db_dir:
-        from repro.serve import VectorService
+    if args.semantic_cache is not None and not args.db_dir:
+        raise SystemExit("--semantic-cache needs --db-dir")
 
+    if args.db_dir:
+        from repro.serve import SemanticCache, VectorService
+
+        semantic_cache = (
+            SemanticCache(threshold=args.semantic_cache)
+            if args.semantic_cache is not None else None
+        )
         emb = np.asarray(
             state.params["embed"][prompts].mean(axis=1), np.float32
         )
         with VectorService.load(
             args.db_dir, batch_size=args.batch, memory_budget=memory_budget,
             recall_target=args.recall_target,
+            semantic_cache=semantic_cache,
         ) as svc:
             names = svc.list_collections()
             if not names:
@@ -167,6 +188,21 @@ def main(argv=None):
             for i, (coll, fut) in enumerate(zip(targets, futs)):
                 ids = np.asarray(fut.result().result.ids)
                 print(f"prompt {i} -> :{coll} -> ids {ids}")
+            if semantic_cache is not None:
+                # replay the same prompts: every retrieval should now be a
+                # cache hit (an already-completed future, no dispatch)
+                replay = [
+                    svc.submit(coll, e, k=args.retrieve_k)
+                    for coll, e in zip(targets, emb)
+                ]
+                svc.flush()
+                cached = sum(f.result().cached for f in replay)
+                m = svc.metrics()
+                print(
+                    f"semantic cache (threshold {args.semantic_cache}): "
+                    f"replay served {cached}/{len(replay)} from cache; "
+                    f"{m.semantic_hits} hits / {m.semantic_misses} misses"
+                )
     elif args.index_dir:
         from repro.core import MutableIndex, load_index
         from repro.serve import BatchingEngine

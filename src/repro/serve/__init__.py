@@ -5,15 +5,18 @@ from repro.serve.engine import (
     EngineMetrics,
     RequestResult,
 )
+from repro.serve.semantic_cache import CacheStats, SemanticCache
 from repro.serve.service import CollectionHandle, VectorService
 
 __all__ = [
     "BatchingEngine",
+    "CacheStats",
     "CollectionHandle",
     "CompileCache",
     "CompileCacheStats",
     "DEFAULT_COLLECTION",
     "EngineMetrics",
     "RequestResult",
+    "SemanticCache",
     "VectorService",
 ]

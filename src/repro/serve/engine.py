@@ -10,9 +10,11 @@ two — the paper's "query threads" as a batching frontend:
   * one or more named **collections** register a search backend each
     (``add_collection``); ``submit`` enqueues one query (optionally with
     its own ``k``/``SearchParams``/``collection``) and returns a future;
-  * requests are grouped by ``(collection, k-bin, params)``: each distinct
-    group fills its own fixed-shape batch, so per-request knobs never
-    force a recompile of an already-warm executable. Per-request ``k`` is
+  * requests are grouped by ``(collection, k-bin, params, filter)``: each
+    distinct group fills its own fixed-shape batch, so per-request knobs
+    never force a recompile of an already-warm executable — and requests
+    carrying different filter predicates (static args of the compiled
+    program) never share a dispatch. Per-request ``k`` is
     rounded UP to the engine's ``k_bins`` grid (results trimmed back to
     the requested k), so the number of compiled shapes — and the padding a
     small k pays — stays bounded no matter how many distinct k values
@@ -73,6 +75,7 @@ class RequestResult(NamedTuple):
     latency_ms: float    # submit -> demux wall time
     batch_size: int      # how many real requests shared the dispatch
     batch_index: int     # which dispatch served it (0-based)
+    cached: bool = False  # served from the semantic cache, no dispatch
 
 
 class EngineMetrics(NamedTuple):
@@ -109,6 +112,12 @@ class EngineMetrics(NamedTuple):
     # requests whose search exited before the resolved params' max_hops
     # (early termination, beam exhaustion, or convergence)
     early_exits: int = 0
+    # semantic query cache (populated by VectorService when one is
+    # installed; the bare engine reports zeros)
+    semantic_hits: int = 0          # submits served from the cache
+    semantic_misses: int = 0        # submits that fell through to a dispatch
+    semantic_evictions: int = 0     # entries dropped by LRU or TTL
+    semantic_invalidations: int = 0  # entries dropped by writes
 
 
 class _Pending(NamedTuple):
@@ -134,6 +143,10 @@ class _Collection(NamedTuple):
     # () -> {pages_fetched, fetch_hits, fetch_wall_s}; None when the
     # backend has no streaming page tier
     fetch_stats_fn: Callable | None = None
+    # whether search_fn takes a 4th positional arg (a FilterExpr): True
+    # for index-backed collections whose search exposes filter=; raw
+    # three-arg closures reject filtered submits up front
+    accepts_filter: bool = False
 
 
 class BatchingEngine:
@@ -167,7 +180,7 @@ class BatchingEngine:
         self._clock = clock
         self._lock = threading.RLock()
         self._collections: dict[str, _Collection] = {}
-        # (collection, k_bin, params) -> pending requests of that group
+        # (collection, k_bin, params, filter) -> pending requests of that group
         self._pending: dict[tuple, list[_Pending]] = {}
         self._timer: threading.Timer | None = None
         self._timer_gen = 0     # invalidates stale timers (see _flush_due)
@@ -256,14 +269,24 @@ class BatchingEngine:
         """
         if not name or not isinstance(name, str):
             raise ValueError("collection name must be a non-empty string")
+        accepts_filter = False
         if index is not None:
             if search_fn is not None:
                 raise ValueError("pass either search_fn or index, not both")
+            import inspect
 
-            def search_fn(queries, k_bin, p, _index=index, _mesh=mesh):
+            accepts_filter = "filter" in inspect.signature(
+                index.search
+            ).parameters
+
+            def search_fn(queries, k_bin, p, flt=None, _index=index,
+                          _mesh=mesh):
+                kw = {}
                 if _mesh is not None:
-                    return _index.search(queries, k=k_bin, params=p, mesh=_mesh)
-                return _index.search(queries, k=k_bin, params=p)
+                    kw["mesh"] = _mesh
+                if flt is not None:
+                    kw["filter"] = flt
+                return _index.search(queries, k=k_bin, params=p, **kw)
 
             dim = index.dim
             if default_params is None:
@@ -303,6 +326,7 @@ class BatchingEngine:
             delete_fn=delete_fn,
             compact_fn=compact_fn,
             fetch_stats_fn=fetch_stats_fn,
+            accepts_filter=accepts_filter,
         )
         with self._lock:
             if self._closed:
@@ -379,14 +403,23 @@ class BatchingEngine:
         k: int | None = None,
         params: SearchParams | None = None,
         collection: str | None = None,
+        filter=None,
     ) -> Future:
         """Enqueue one (d,) query; returns a Future[RequestResult].
 
         ``k``/``params`` default to the target collection's; requests
-        sharing a (collection, k-bin, params) group share one fixed-shape
-        dispatch.
+        sharing a (collection, k-bin, params, filter) group share one
+        fixed-shape dispatch. The filter expression is part of the group
+        key: a batch is a SINGLE backend call, and the predicate is a
+        static argument of its compiled program — two requests with
+        different predicates can never share a dispatch.
         """
         col = self._resolve_collection(collection)
+        if filter is not None and not col.accepts_filter:
+            raise ValueError(
+                f"collection {col.name!r} does not support filtered "
+                "search (raw search_fn backends take no filter)"
+            )
         q = np.asarray(query, self._dtype).reshape(-1)
         if q.shape[0] != col.dim:
             raise ValueError(
@@ -401,7 +434,7 @@ class BatchingEngine:
         if k < 1:
             raise ValueError("k must be >= 1")
         params = params if params is not None else col.default_params
-        key = (col.name, self._bin_k(k), params)
+        key = (col.name, self._bin_k(k), params, filter)
         fut: Future = Future()
         batch = None
         with self._lock:
@@ -449,10 +482,13 @@ class BatchingEngine:
         k: int | None = None,
         params: SearchParams | None = None,
         collection: str | None = None,
+        filter=None,
     ) -> list[RequestResult]:
         """Synchronous convenience: submit a (Q, d) batch, flush, gather."""
         futs = [
-            self.submit(q, k=k, params=params, collection=collection)
+            self.submit(
+                q, k=k, params=params, collection=collection, filter=filter
+            )
             for q in np.asarray(queries)
         ]
         self.flush(collection=collection)
@@ -467,10 +503,13 @@ class BatchingEngine:
     # half-applied one.
 
     def insert(
-        self, vectors: np.ndarray, ids=None, *, collection: str | None = None
+        self, vectors: np.ndarray, ids=None, *,
+        collection: str | None = None, metadata=None,
     ) -> np.ndarray:
         """Insert vectors into a collection's mutable backend; returns their
-        external ids. Raises if the collection wraps an immutable index."""
+        external ids. Raises if the collection wraps an immutable index.
+        ``metadata`` (validated against the backend's schema) makes the new
+        rows filterable immediately."""
         col = self._resolve_collection(collection)
         if col.insert_fn is None:
             raise RuntimeError(
@@ -480,7 +519,11 @@ class BatchingEngine:
             if self._closed:
                 raise RuntimeError("engine is closed")
         vectors = np.asarray(vectors, self._dtype).reshape(-1, col.dim)
-        out = col.insert_fn(vectors, ids)
+        out = (
+            col.insert_fn(vectors, ids, metadata=metadata)
+            if metadata is not None
+            else col.insert_fn(vectors, ids)
+        )
         with self._lock:
             self._inserts += vectors.shape[0]
         return out
@@ -614,7 +657,7 @@ class BatchingEngine:
 
     def _run_batch(self, key: tuple, batch: tuple[int, list[_Pending]]) -> None:
         """Pad, search (outside the lock), record counters, demux."""
-        name, k_bin, params = key
+        name, k_bin, params, flt = key
         batch_index, take = batch
         n = len(take)
         with self._lock:
@@ -646,9 +689,14 @@ class BatchingEngine:
             resolved = (k_bin, params)
         self._compile_cache.note(
             col.geometry + (self._batch_size, resolved)
+            + ((("filter", flt),) if flt is not None else ())
         )
         try:
-            out = col.search_fn(padded, k_bin, params)
+            out = (
+                col.search_fn(padded, k_bin, params, flt)
+                if col.accepts_filter
+                else col.search_fn(padded, k_bin, params)
+            )
             out = jax.tree.map(np.asarray, out)
         except Exception as e:
             # a backend failure must reach every waiter of THIS group

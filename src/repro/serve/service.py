@@ -15,7 +15,14 @@ is the database surface. A :class:`VectorService` owns
     search executables are keyed by *geometry* (dim, page capacity, memory
     mode, array shapes, batch, resolved params), not by collection, so
     attaching a second collection with the geometry of an already-warm one
-    compiles **zero** new executables (observable in ``metrics()``).
+    compiles **zero** new executables (observable in ``metrics()``), and
+  * optionally a :class:`repro.serve.semantic_cache.SemanticCache` in
+    front of ``submit``: a query embedding within a cosine threshold of a
+    recently answered one (same collection/k/params/filter scope) returns
+    the cached result as an already-completed future — no queueing, no
+    dispatch. Writes to a collection invalidate its cached entries, so a
+    hit is never stale; hit/miss/eviction/invalidation counters ride
+    ``metrics()``.
 
 Lifecycle::
 
@@ -36,6 +43,7 @@ see ``repro.core.persist.save_database``.
 from __future__ import annotations
 
 import threading
+from concurrent.futures import Future
 from typing import Any, Iterator
 
 import numpy as np
@@ -44,6 +52,7 @@ from repro.core import persist
 from repro.core.config import PageANNConfig, SearchParams
 from repro.serve.compile_cache import CompileCache
 from repro.serve.engine import BatchingEngine, EngineMetrics, RequestResult
+from repro.serve.semantic_cache import SemanticCache
 
 
 class CollectionHandle:
@@ -62,14 +71,20 @@ class CollectionHandle:
         """The underlying ``VectorIndex`` (e.g. for ``stats`` / ``save``)."""
         return self._service.index_of(self.name)
 
-    def submit(self, query, *, k=None, params=None):
-        return self._service.submit(self.name, query, k=k, params=params)
+    def submit(self, query, *, k=None, params=None, filter=None):
+        return self._service.submit(
+            self.name, query, k=k, params=params, filter=filter
+        )
 
-    def search(self, queries, *, k=None, params=None):
-        return self._service.search(self.name, queries, k=k, params=params)
+    def search(self, queries, *, k=None, params=None, filter=None):
+        return self._service.search(
+            self.name, queries, k=k, params=params, filter=filter
+        )
 
-    def insert(self, vectors, ids=None):
-        return self._service.insert(self.name, vectors, ids)
+    def insert(self, vectors, ids=None, *, metadata=None):
+        return self._service.insert(
+            self.name, vectors, ids, metadata=metadata
+        )
 
     def delete(self, ids):
         return self._service.delete(self.name, ids)
@@ -94,6 +109,7 @@ class VectorService:
         timeout_ms: float | None = None,
         k_bins: tuple[int, ...] | None = None,
         compile_cache: CompileCache | None = None,
+        semantic_cache: SemanticCache | None = None,
         **engine_kwargs: Any,
     ):
         self._compile_cache = compile_cache or CompileCache()
@@ -104,8 +120,12 @@ class VectorService:
             compile_cache=self._compile_cache,
             **engine_kwargs,
         )
+        self._semantic_cache = semantic_cache
         self._lock = threading.Lock()
         self._indexes: dict[str, Any] = {}
+        # per-collection write generation: bumped by insert/delete/compact/
+        # drop so in-flight cache misses never store a stale result
+        self._write_gen: dict[str, int] = {}
         self._closed = False
 
     # ------------------------------------------------------- context manager
@@ -231,6 +251,9 @@ class VectorService:
         self._engine.remove_collection(name)
         with self._lock:
             self._indexes.pop(name, None)
+        # a later collection reusing the name must not inherit cached
+        # results computed against the dropped index
+        self._invalidate(name)
 
     def list_collections(self) -> tuple[str, ...]:
         with self._lock:
@@ -269,12 +292,52 @@ class VectorService:
         *,
         k: int | None = None,
         params: SearchParams | None = None,
+        filter=None,
     ):
         """Enqueue one query for ``collection``; returns a
         Future[RequestResult]. Requests sharing a (collection, k-bin,
-        params) group share one fixed-shape dispatch on the common core."""
-        return self._engine.submit(query, k=k, params=params,
-                                   collection=collection)
+        params, filter) group share one fixed-shape dispatch on the common
+        core.
+
+        With a :class:`SemanticCache` installed, a query embedding within
+        the cache's cosine threshold of an already-answered one (under the
+        SAME (collection, k, params, filter) scope) resolves immediately
+        from the cache — the returned future is already completed and its
+        ``RequestResult.cached`` is True. Misses fall through to the
+        engine and populate the cache on completion, unless the collection
+        was written to while the request was in flight (the result would
+        already be stale)."""
+        cache = self._semantic_cache
+        if cache is None:
+            return self._engine.submit(query, k=k, params=params,
+                                       collection=collection, filter=filter)
+        scope = (collection, k, params, filter)
+        q = np.asarray(query, np.float32).reshape(-1)
+        hit = cache.get(scope, q)
+        if hit is not None:
+            fut: Future = Future()
+            fut.set_result(
+                RequestResult(
+                    result=hit, latency_ms=0.0, batch_size=0,
+                    batch_index=-1, cached=True,
+                )
+            )
+            return fut
+        with self._lock:
+            gen = self._write_gen.get(collection, 0)
+        fut = self._engine.submit(query, k=k, params=params,
+                                  collection=collection, filter=filter)
+
+        def _store(done, _q=q, _scope=scope, _gen=gen):
+            if done.cancelled() or done.exception() is not None:
+                return
+            with self._lock:
+                stale = self._write_gen.get(collection, 0) != _gen
+            if not stale:
+                cache.put(_scope, _q, done.result().result)
+
+        fut.add_done_callback(_store)
+        return fut
 
     def search(
         self,
@@ -283,29 +346,72 @@ class VectorService:
         *,
         k: int | None = None,
         params: SearchParams | None = None,
+        filter=None,
     ) -> list[RequestResult]:
-        """Synchronous convenience: submit a (Q, d) batch, flush, gather."""
-        return self._engine.search(queries, k=k, params=params,
-                                   collection=collection)
+        """Synchronous convenience: submit a (Q, d) batch, flush, gather.
+        Routed through :meth:`submit` so the semantic cache applies."""
+        futs = [
+            self.submit(collection, q, k=k, params=params, filter=filter)
+            for q in np.asarray(queries)
+        ]
+        self._engine.flush(collection=collection)
+        return [f.result() for f in futs]
 
     def flush(self, collection: str | None = None) -> None:
         self._engine.flush(collection=collection)
 
     # --------------------------------------------------------------- writes
-    def insert(self, collection: str, vectors, ids=None) -> np.ndarray:
-        return self._engine.insert(vectors, ids, collection=collection)
+    def _invalidate(self, collection: str) -> None:
+        """A write landed on ``collection``: bump its generation (in-flight
+        misses stop populating the cache) and drop its cached entries."""
+        with self._lock:
+            self._write_gen[collection] = (
+                self._write_gen.get(collection, 0) + 1
+            )
+        if self._semantic_cache is not None:
+            self._semantic_cache.invalidate(
+                lambda scope: scope[0] == collection
+            )
+
+    def insert(
+        self, collection: str, vectors, ids=None, *, metadata=None
+    ) -> np.ndarray:
+        out = self._engine.insert(
+            vectors, ids, collection=collection, metadata=metadata
+        )
+        self._invalidate(collection)
+        return out
 
     def delete(self, collection: str, ids) -> int:
-        return self._engine.delete(ids, collection=collection)
+        removed = self._engine.delete(ids, collection=collection)
+        self._invalidate(collection)
+        return removed
 
     def compact(self, collection: str) -> bool:
-        return self._engine.compact(collection=collection)
+        # compaction does not change the live set, but it swaps the base
+        # artifact the cached results were computed against — invalidate
+        # rather than reason about bit-identity across a rebuild
+        did = self._engine.compact(collection=collection)
+        if did:
+            self._invalidate(collection)
+        return did
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> EngineMetrics:
         """Aggregate serving metrics of the shared core, including the
-        compile-cache hit/miss/unique-executable counters."""
-        return self._engine.metrics()
+        compile-cache hit/miss/unique-executable counters and — when a
+        semantic cache is installed — its hit/miss/eviction/invalidation
+        counters."""
+        m = self._engine.metrics()
+        if self._semantic_cache is not None:
+            cs = self._semantic_cache.stats()
+            m = m._replace(
+                semantic_hits=cs.hits,
+                semantic_misses=cs.misses,
+                semantic_evictions=cs.evictions,
+                semantic_invalidations=cs.invalidations,
+            )
+        return m
 
     # ------------------------------------------------------------ lifecycle
     def save(self, directory: str) -> None:

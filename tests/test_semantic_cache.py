@@ -1,0 +1,239 @@
+"""SemanticCache unit behavior (threshold, scoping, LRU, TTL,
+invalidation) and its integration with VectorService.submit (cached
+futures, write invalidation, stale in-flight misses, metrics merge)."""
+import numpy as np
+import pytest
+
+from repro.core.search import SearchResult
+from repro.serve import SemanticCache, VectorService
+
+
+def _vec(*xs):
+    return np.asarray(xs, np.float32)
+
+
+def _rot(deg):
+    """Unit 2-vector at ``deg`` degrees from [1, 0]."""
+    r = np.deg2rad(deg)
+    return _vec(np.cos(r), np.sin(r))
+
+
+# ------------------------------------------------------------------- unit
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="cosine"):
+        SemanticCache(threshold=1.5)
+    with pytest.raises(ValueError, match="capacity"):
+        SemanticCache(capacity=0)
+    with pytest.raises(ValueError, match="ttl"):
+        SemanticCache(ttl=0)
+
+
+def test_threshold_hit_and_miss():
+    c = SemanticCache(threshold=np.cos(np.deg2rad(10)))
+    c.put("s", _rot(0), "answer")
+    assert c.get("s", _rot(5)) == "answer"       # within 10 degrees
+    assert c.get("s", _rot(45)) is None          # outside
+    # scale-invariant: cosine ignores magnitude
+    assert c.get("s", 100.0 * _rot(5)) == "answer"
+    s = c.stats()
+    assert (s.hits, s.misses, s.entries) == (2, 1, 1)
+
+
+def test_best_match_wins_not_first():
+    c = SemanticCache(threshold=0.9)
+    c.put("s", _rot(0), "a")
+    c.put("s", _rot(20), "b")
+    assert c.get("s", _rot(19)) == "b"
+
+
+def test_scope_isolation():
+    c = SemanticCache(threshold=0.9)
+    c.put(("docs", 10, None, None), _rot(0), "ten")
+    assert c.get(("docs", 5, None, None), _rot(0)) is None
+    assert c.get(("docs", 10, None, None), _rot(0)) == "ten"
+
+
+def test_lru_eviction_and_hit_refresh():
+    c = SemanticCache(threshold=0.99, capacity=2)
+    c.put("a", _rot(0), "A")
+    c.put("b", _rot(90), "B")
+    assert c.get("a", _rot(0)) == "A"   # refresh: 'a' is now most recent
+    c.put("c", _rot(180), "C")          # evicts 'b', the LRU tail
+    assert c.get("b", _rot(90)) is None
+    assert c.get("a", _rot(0)) == "A"
+    assert c.get("c", _rot(180)) == "C"
+    assert c.stats().evictions == 1
+    assert len(c) == 2
+
+
+def test_ttl_expiry_with_fake_clock():
+    now = [0.0]
+    c = SemanticCache(threshold=0.9, ttl=10.0, clock=lambda: now[0])
+    c.put("s", _rot(0), "fresh")
+    now[0] = 9.0
+    assert c.get("s", _rot(0)) == "fresh"
+    now[0] = 11.0
+    assert c.get("s", _rot(0)) is None
+    s = c.stats()
+    assert s.evictions == 1 and s.entries == 0
+
+
+def test_invalidate_predicate_and_all():
+    c = SemanticCache(threshold=0.9)
+    c.put(("docs", 1), _rot(0), "d")
+    c.put(("docs", 2), _rot(0), "d2")
+    c.put(("wiki", 1), _rot(0), "w")
+    assert c.invalidate(lambda s: s[0] == "docs") == 2
+    assert c.get(("wiki", 1), _rot(0)) == "w"
+    assert c.invalidate() == 1
+    assert len(c) == 0
+    assert c.stats().invalidations == 3
+
+
+def test_zero_norm_embeddings_bypass():
+    c = SemanticCache(threshold=0.9)
+    c.put("s", _vec(0.0, 0.0), "never")
+    assert len(c) == 0
+    assert c.get("s", _vec(0.0, 0.0)) is None
+    c.put("s", _vec(np.inf, 1.0), "never")
+    assert len(c) == 0
+
+
+# ------------------------------------------------------------ integration
+class FakeIndex:
+    """Deterministic VectorIndex stand-in: row i's ids encode
+    round(q[i, 0]); counts dispatched searches."""
+
+    dim = 4
+
+    def __init__(self):
+        self.searches = 0
+        self.next_id = 100
+
+    def search(self, queries, k=None, params=None, *, mesh=None,
+               filter=None, filter_params=None):
+        self.searches += 1
+        q = np.asarray(queries)
+        b, kk = q.shape[0], k or 3
+        tag = np.round(q[:, :1]).astype(np.int64)
+        z = np.zeros((b,), np.int32)
+        return SearchResult(
+            ids=tag + np.arange(kk)[None],
+            dists=np.zeros((b, kk), np.float32),
+            ios=z, hops=z, cache_hits=z,
+        )
+
+    def insert(self, vectors, ids=None, *, metadata=None):
+        n = len(np.asarray(vectors))
+        out = np.arange(self.next_id, self.next_id + n)
+        self.next_id += n
+        return out
+
+    def delete(self, ids):
+        return len(np.asarray(ids).reshape(-1))
+
+    def compact(self):
+        return True
+
+
+def _query(tag):
+    v = np.zeros(4, np.float32)
+    v[0] = tag
+    v[1] = 1.0
+    return v
+
+
+def test_service_serves_repeats_from_cache():
+    idx = FakeIndex()
+    with VectorService(
+        batch_size=4, semantic_cache=SemanticCache(threshold=0.999)
+    ) as svc:
+        svc.create_collection("docs", idx, k=3)
+        first = svc.submit("docs", _query(7))
+        svc.flush()
+        r1 = first.result()
+        assert not r1.cached
+        dispatched = idx.searches
+
+        again = svc.submit("docs", _query(7))
+        r2 = again.result()  # already completed: no flush needed
+        assert r2.cached and r2.batch_index == -1
+        assert idx.searches == dispatched
+        np.testing.assert_array_equal(
+            np.asarray(r1.result.ids), np.asarray(r2.result.ids)
+        )
+        m = svc.metrics()
+        assert m.semantic_hits == 1 and m.semantic_misses == 1
+
+
+def test_cache_scopes_split_by_k_and_filter():
+    with VectorService(
+        batch_size=4, semantic_cache=SemanticCache(threshold=0.999)
+    ) as svc:
+        svc.create_collection("docs", FakeIndex(), k=3)
+        svc.submit("docs", _query(1), k=3)
+        svc.flush()
+        # same embedding, different k: a different question -> miss
+        fut = svc.submit("docs", _query(1), k=2)
+        svc.flush()
+        assert not fut.result().cached
+
+
+def test_writes_invalidate_cached_answers():
+    idx = FakeIndex()
+    with VectorService(
+        batch_size=4, semantic_cache=SemanticCache(threshold=0.999)
+    ) as svc:
+        svc.create_collection("docs", idx, k=3)
+        svc.submit("docs", _query(5))
+        svc.flush()
+        assert svc.submit("docs", _query(5)).result().cached
+
+        svc.insert("docs", np.ones((1, 4), np.float32))
+        fut = svc.submit("docs", _query(5))
+        svc.flush()
+        assert not fut.result().cached
+        assert svc.metrics().semantic_invalidations >= 1
+
+        # delete and compact invalidate too
+        assert svc.submit("docs", _query(5)).result().cached
+        svc.delete("docs", [100])
+        fut = svc.submit("docs", _query(5))
+        svc.flush()
+        assert not fut.result().cached
+
+        assert svc.submit("docs", _query(5)).result().cached
+        assert svc.compact("docs")
+        fut = svc.submit("docs", _query(5))
+        svc.flush()
+        assert not fut.result().cached
+
+
+def test_in_flight_miss_does_not_cache_across_a_write():
+    """A miss submitted BEFORE a write must not populate the cache when it
+    completes after: its result was computed against the old live set."""
+    idx = FakeIndex()
+    cache = SemanticCache(threshold=0.999)
+    with VectorService(batch_size=64, semantic_cache=cache) as svc:
+        svc.create_collection("docs", idx, k=3)
+        fut = svc.submit("docs", _query(9))  # pending: batch not full
+        svc.insert("docs", np.ones((1, 4), np.float32))  # write lands first
+        svc.flush()
+        fut.result()
+        assert len(cache) == 0
+        replay = svc.submit("docs", _query(9))
+        svc.flush()
+        assert not replay.result().cached
+
+
+def test_no_cache_service_unchanged():
+    idx = FakeIndex()
+    with VectorService(batch_size=4) as svc:
+        svc.create_collection("docs", idx, k=3)
+        svc.submit("docs", _query(2))
+        svc.flush()
+        fut = svc.submit("docs", _query(2))
+        svc.flush()
+        assert not fut.result().cached
+        m = svc.metrics()
+        assert m.semantic_hits == 0 and m.semantic_misses == 0
