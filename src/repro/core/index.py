@@ -416,6 +416,68 @@ class PageANNIndex:
             cache_hits=np.asarray(res.cache_hits),
         )
 
+    def profile(
+        self,
+        queries: np.ndarray,
+        k: int | None = None,
+        params: SearchParams | None = None,
+        *,
+        filter: FilterExpr | None = None,
+        filter_params: FilterParams | None = None,
+        save: str | None = None,
+    ) -> tuple[search_mod.SearchResult, search_mod.HopProfile]:
+        """``search`` with the per-hop trail captured (opt-in debug mode).
+
+        Runs ``core.search.profile_search`` — the same hop transitions,
+        traced as a separate scan program — and returns the translated
+        ``SearchResult`` plus a :class:`repro.core.search.HopProfile`
+        holding, per query per hop: the scheduled frontier page ids, the
+        disk-IO / cache-hit deltas, the shrinking worst-of-top-k frontier
+        and the adaptive stall counter. Calling this never perturbs the
+        compiled fast path: ``search`` keeps its own executables and its
+        results stay bit-identical whether or not profiling ever ran.
+
+        ``save=`` writes the profile as JSON readable by
+        ``python -m repro.obs.report``. Not supported over a streamed
+        (memory-budgeted) index — reload without ``memory_budget``.
+        """
+        if self.fetcher is not None:
+            raise ValueError(
+                "profile() over a streamed (memory-budgeted) index is not "
+                "supported: reload without memory_budget to profile"
+            )
+        p = self.resolve_params(k, params)
+        meta = cfilter = None
+        if filter is not None:
+            fp = filter_params if filter_params is not None else FilterParams()
+            cfilter, sel = self.compiled_filter(filter)
+            factor = self._filter_oversample(sel, fp.max_filter_oversample)
+            if factor > 1:
+                p = p.replace(beam_width=p.beam_width * factor)
+            meta = self.meta
+        res, trail = search_mod.profile_search(
+            jnp.asarray(queries, jnp.float32), self.data, p,
+            capacity=self.store.capacity,
+            mode=self.cfg.memory_mode.value,
+            meta=meta, cfilter=cfilter,
+        )
+        res = search_mod.SearchResult(
+            ids=self.translate_ids(np.asarray(res.ids)),
+            dists=np.asarray(res.dists),
+            ios=np.asarray(res.ios),
+            hops=np.asarray(res.hops),
+            cache_hits=np.asarray(res.cache_hits),
+        )
+        trail = search_mod.HopProfile(*(np.asarray(a) for a in trail))
+        if save is not None:
+            import json
+
+            from repro.obs.report import profile_to_dict
+
+            with open(save, "w") as f:
+                json.dump(profile_to_dict(res, trail), f)
+        return res, trail
+
     # -------------------------------------------------------------- autotune
     def _measure(
         self, queries: jnp.ndarray, params: SearchParams, truth: np.ndarray

@@ -773,6 +773,154 @@ def merge_topk_streams(
 
 
 # --------------------------------------------------------------------------
+# profiling entry point: the same transitions, with the per-hop trail kept
+# --------------------------------------------------------------------------
+
+class HopProfile(NamedTuple):
+    """Per-hop trail of a profiled search (leading dims (Q, max_hops)).
+
+    Hops past a query's exit carry ``active=False`` with PAD pages and
+    zero deltas — fixed shape, mask to read. ``worst_topk`` is the worst
+    running top-k distance *after* the hop (the early-termination
+    frontier signal); ``stall`` is the adaptive patience counter (all
+    zeros when the params are non-adaptive).
+    """
+
+    pages: jnp.ndarray       # (Q, H, b) page ids scheduled, PAD padded
+    ios: jnp.ndarray         # (Q, H) disk page reads this hop
+    cache_hits: jnp.ndarray  # (Q, H) cached page reads this hop
+    active: jnp.ndarray      # (Q, H) bool: did the lane actually hop
+    worst_topk: jnp.ndarray  # (Q, H) f32 running worst top-k distance
+    stall: jnp.ndarray       # (Q, H) int32 patience counter after the hop
+
+
+def _profile_one(
+    q: jnp.ndarray,
+    valid: jnp.ndarray,
+    data: SearchData,
+    *,
+    capacity: int,
+    beam: int,
+    io_batch: int,
+    k: int,
+    max_hops: int,
+    entries: int,
+    mode: str,
+    fetch=None,
+    patience: int | None = None,
+    epsilon: float = 0.0,
+    entry_slack: int | None = None,
+    min_entries: int = 1,
+    meta: MetaArrays | None = None,
+    cfilter: CompiledFilter | None = None,
+):
+    """``_search_one`` with the per-hop trail recorded.
+
+    A ``lax.scan`` over ``max_hops`` replaces the ``while_loop``, calling
+    the SAME pure transitions (``select_batch`` -> ``score_page_batch``
+    -> ``merge``) and replicating the loop semantics explicitly: each
+    step evaluates the while-cond, runs the body, and keeps the new state
+    only where the cond held — the per-lane freeze vmap applies to a
+    while_loop. ``_search_one`` itself is untouched, so the non-profiled
+    path still traces the exact pre-profiling program.
+    """
+    disk_lut = pq_mod.pq_lut(q, data.disk_codebooks)
+    mem_lut = (
+        pq_mod.pq_lut(q, data.mem_codebooks)
+        if mode != MemoryMode.DISK_ONLY.value
+        else None
+    )
+    state = init_state(
+        q, data, disk_lut, beam=beam, k=k, entries=entries,
+        entry_slack=entry_slack, min_entries=min_entries, patience=patience,
+    )
+
+    def cond(state: BeamState):
+        live = (
+            (~state.cand_vis)
+            & (state.cand_ids != PAD)
+            & jnp.isfinite(state.cand_d)
+        )
+        go = live.any() & (state.hops < max_hops) & valid
+        if patience is not None:
+            go = go & (state.stall < patience)
+        return go
+
+    def step(state: BeamState, _):
+        active = cond(state)
+        st, batch = select_batch(
+            state, capacity=capacity, io_batch=io_batch
+        )
+        mids, md, nids, nd, io_delta, hit_delta = score_page_batch(
+            q, data, batch, st, disk_lut, mem_lut,
+            capacity=capacity, mode=mode, fetch=fetch,
+            meta=meta, cfilter=cfilter,
+        )
+        st = merge(
+            st, mids, md, nids, nd, io_delta, hit_delta,
+            patience=patience, epsilon=epsilon,
+        )
+        new = jax.tree.map(
+            lambda a, b: jnp.where(active, b, a), state, st
+        )
+        rec = (
+            jnp.where(active, batch, PAD),
+            jnp.where(active, io_delta, 0).astype(jnp.int32),
+            jnp.where(active, hit_delta, 0).astype(jnp.int32),
+            active,
+            new.res_d[k - 1],
+            new.stall if patience is not None else jnp.int32(0),
+        )
+        return new, rec
+
+    final, (pages, ios, hits, active, worst, stall) = jax.lax.scan(
+        step, state, None, length=max_hops
+    )
+    return (
+        (final.res_ids, final.res_d, final.io, final.hops, final.cache_hits),
+        (pages, ios, hits, active, worst, stall),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("params", "capacity", "mode", "cfilter")
+)
+def profile_search(
+    queries: jnp.ndarray,
+    data: SearchData,
+    params: SearchParams,
+    *,
+    capacity: int,
+    mode: str,
+    meta: MetaArrays | None = None,
+    cfilter: CompiledFilter | None = None,
+) -> tuple[SearchResult, HopProfile]:
+    """``batch_search`` plus the per-hop trail (opt-in debug mode).
+
+    Same arguments, same selection semantics: the profile run reuses the
+    hop transitions verbatim, so scheduled pages, IO counters, hops and
+    result ids match ``batch_search`` exactly (distances match up to XLA
+    fusion reassociation across the scan-vs-while program boundary).
+    This is a SEPARATE traced program — calling it never touches the
+    compiled fast path's cache entries or its codegen.
+    """
+    valid = jnp.ones((queries.shape[0],), bool)
+    fn = functools.partial(
+        _profile_one, data=data, meta=meta, cfilter=cfilter,
+        **_impl_kwargs(params, capacity, mode),
+    )
+    res, trail = jax.vmap(lambda q, v: fn(q, v))(queries, valid)
+    ids, dists, ios, hops, hits = res
+    pages, hio, hhits, active, worst, stall = trail
+    return (
+        SearchResult(ids=ids, dists=dists, ios=ios, hops=hops,
+                     cache_hits=hits),
+        HopProfile(pages=pages, ios=hio, cache_hits=hhits, active=active,
+                   worst_topk=worst, stall=stall),
+    )
+
+
+# --------------------------------------------------------------------------
 # mesh-sharded entry point: shard the query batch, replicate the index
 # --------------------------------------------------------------------------
 

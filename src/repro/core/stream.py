@@ -76,6 +76,15 @@ class PageFetcher:
         self._pages_fetched = 0
         self._fetch_hits = 0
         self._fetch_wall_s = 0.0
+        # trailing window of per-callback wall seconds — the exposition
+        # layer's fetch-latency histogram feed (bounded, like the engine's
+        # latency window)
+        self._wall_window: collections.deque = collections.deque(maxlen=4096)
+        # optional span tracer (duck-typed, see repro.obs.trace.Tracer);
+        # attached by the serving engine so per-hop host fetches show up
+        # as child spans of the dispatch that triggered them. The fetcher
+        # stamps spans with the tracer's own clock.
+        self.tracer = None
 
     @property
     def num_pages(self) -> int:
@@ -92,6 +101,7 @@ class PageFetcher:
         rows, lanes = self.record_shape
         out = np.zeros((flat.size, rows, lanes), np.float32)
         with self._lock:
+            fetched0 = self._pages_fetched
             for j, pid in enumerate(flat):
                 if pid < 0:
                     continue
@@ -108,18 +118,31 @@ class PageFetcher:
                     if len(self._stage) > self._stage_pages:
                         self._stage.popitem(last=False)     # evict LRU
                 out[j] = rec
-            self._fetch_wall_s += time.perf_counter() - t0
+            wall = time.perf_counter() - t0
+            self._fetch_wall_s += wall
+            self._wall_window.append(wall)
+            misses = self._pages_fetched - fetched0
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            t1 = tr.now()
+            tr.add("page_fetch", t1 - wall, t1, cat="host-fetch",
+                   track="host-fetch",
+                   args={"requested": int((flat >= 0).sum()),
+                         "misses": misses})
         return out.reshape(ids.shape + (rows, lanes))
 
     # ------------------------------------------------------------- counters
     def fetch_stats(self) -> dict:
         """Cumulative counters: pages read off disk, staging-cache hits,
-        and wall seconds spent inside the host callback."""
+        and wall seconds spent inside the host callback — plus
+        ``wall_window``, the bounded trailing window of per-callback wall
+        seconds feeding the exposition layer's fetch-latency histogram."""
         with self._lock:
             return dict(
                 pages_fetched=self._pages_fetched,
                 fetch_hits=self._fetch_hits,
                 fetch_wall_s=self._fetch_wall_s,
+                wall_window=tuple(self._wall_window),
             )
 
     def reset_stats(self) -> None:
@@ -127,6 +150,7 @@ class PageFetcher:
             self._pages_fetched = 0
             self._fetch_hits = 0
             self._fetch_wall_s = 0.0
+            self._wall_window.clear()
 
     def __repr__(self) -> str:
         return (

@@ -33,6 +33,16 @@ DELETED again — the serving process takes writes without an index rebuild.
 prompt retrievals to demonstrate similarity hits: repeat queries within
 the cosine threshold of an answered one skip the dispatch entirely.
 
+Observability (``repro.obs``): ``--metrics-port PORT`` starts the stdlib
+HTTP sidecar serving ``/metrics`` (Prometheus text exposition),
+``/healthz`` and ``/stats`` next to the serving loop (0 = ephemeral
+port, printed); ``--trace-out FILE`` threads a request tracer through
+the engine/service and writes the capture as Chrome ``trace_event`` JSON
+(open in Perfetto, or render with ``python -m repro.obs.report``);
+``--obs-selfcheck`` scrapes the process's own sidecar over real HTTP and
+asserts the exposition parses and its counters reconcile with
+``metrics()`` — the CI smoke gate.
+
 Usage (CPU smoke; --arch defaults to granite-3-2b):
   PYTHONPATH=src python -m repro.launch.serve --smoke \
       --batch 4 --prompt-len 32 --gen 16 [--index-dir idx.pageann] \
@@ -67,6 +77,63 @@ def generate(params, arch, prompts: jnp.ndarray, gen: int):
         logits, cache = tf.decode_step(params, cache, out[-1], jnp.int32(t), arch)
         out.append(jnp.argmax(logits[:, : arch.vocab_size], -1).astype(jnp.int32))
     return jnp.stack(out, axis=1)
+
+
+def _start_obs(args, source):
+    """Start the metrics sidecar over ``source`` (an engine or service)
+    when ``--metrics-port`` was given. Returns the server or None."""
+    if args.metrics_port is None:
+        return None
+    from repro.obs import MetricsServer, serve_registry
+
+    registry = serve_registry(source)
+    server = MetricsServer(
+        registry, source=source, port=args.metrics_port
+    )
+    print(f"metrics sidecar: {server.url}/metrics (+ /healthz, /stats)")
+    return server
+
+
+def _obs_selfcheck(server, source):
+    """Scrape the process's own sidecar over real HTTP and reconcile the
+    exposition against a fresh ``metrics()`` snapshot (no concurrent
+    traffic at this point, so the counters must agree exactly)."""
+    import json
+    import urllib.request
+
+    from repro.obs import parse_prometheus_text, sample_value
+
+    if urllib.request.urlopen(f"{server.url}/healthz").read() != b"ok\n":
+        raise SystemExit("obs selfcheck: /healthz did not answer ok")
+    text = urllib.request.urlopen(f"{server.url}/metrics").read().decode()
+    parsed = parse_prometheus_text(text)     # raises on malformed lines
+    m = source.metrics()
+    checks = {
+        "pageann_requests_total": m.requests,
+        "pageann_batches_total": m.batches,
+        "pageann_compile_misses_total": m.compile_misses,
+        "pageann_early_exits_total": m.early_exits,
+        "pageann_collections": m.collections,
+    }
+    for name, want in checks.items():
+        got = sample_value(parsed, name)     # KeyError if the series is gone
+        if got != float(want):
+            raise SystemExit(
+                f"obs selfcheck: {name} exposed {got}, metrics() says {want}"
+            )
+    if sample_value(parsed, "pageann_request_latency_ms_count") < m.requests:
+        raise SystemExit(
+            "obs selfcheck: latency histogram lost requests"
+        )
+    stats = json.loads(
+        urllib.request.urlopen(f"{server.url}/stats").read()
+    )
+    if "metrics" not in stats:
+        raise SystemExit("obs selfcheck: /stats payload has no metrics")
+    print(
+        f"obs selfcheck ok: {len(parsed)} series, "
+        f"{m.requests} requests reconciled"
+    )
 
 
 def main(argv=None):
@@ -123,7 +190,39 @@ def main(argv=None):
              "fails loudly; with --db-dir collections without one keep "
              "their own defaults",
     )
+    ap.add_argument(
+        "--metrics-port", type=int, default=None, metavar="PORT",
+        help="start the repro.obs HTTP sidecar on this port serving "
+             "/metrics (Prometheus text), /healthz and /stats (0 = pick "
+             "an ephemeral port and print it). Default: no sidecar",
+    )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="FILE",
+        help="thread a request tracer through the serving path and write "
+             "the captured spans as Chrome trace_event JSON (view in "
+             "Perfetto or render with python -m repro.obs.report)",
+    )
+    ap.add_argument(
+        "--obs-selfcheck", action="store_true",
+        help="(with --metrics-port) scrape this process's own sidecar "
+             "over HTTP and assert the exposition parses and reconciles "
+             "with metrics() — exits nonzero on mismatch",
+    )
     args = ap.parse_args(argv)
+    if args.obs_selfcheck and args.metrics_port is None:
+        raise SystemExit("--obs-selfcheck needs --metrics-port")
+    if (args.metrics_port is not None or args.trace_out) and not (
+        args.db_dir or args.index_dir
+    ):
+        raise SystemExit(
+            "--metrics-port/--trace-out need --index-dir or --db-dir "
+            "(nothing to observe without a serving path)"
+        )
+    tracer = None
+    if args.trace_out is not None:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
     memory_budget = None
     if args.memory_budget is not None:
         from repro.core import MemoryBudget
@@ -157,7 +256,9 @@ def main(argv=None):
             args.db_dir, batch_size=args.batch, memory_budget=memory_budget,
             recall_target=args.recall_target,
             semantic_cache=semantic_cache,
+            tracer=tracer,
         ) as svc:
+            obs_server = _start_obs(args, svc)
             names = svc.list_collections()
             if not names:
                 raise SystemExit(f"{args.db_dir}: database has no collections")
@@ -203,6 +304,10 @@ def main(argv=None):
                     f"replay served {cached}/{len(replay)} from cache; "
                     f"{m.semantic_hits} hits / {m.semantic_misses} misses"
                 )
+            if obs_server is not None:
+                if args.obs_selfcheck:
+                    _obs_selfcheck(obs_server, svc)
+                obs_server.close()
     elif args.index_dir:
         from repro.core import MutableIndex, load_index
         from repro.serve import BatchingEngine
@@ -235,8 +340,9 @@ def main(argv=None):
             )
         with BatchingEngine.from_index(
             index, k=args.retrieve_k, batch_size=args.batch,
-            params=tuned_params,
+            params=tuned_params, tracer=tracer,
         ) as engine:
+            obs_server = _start_obs(args, engine)
             rows = engine.search(emb)
             ids = np.stack([r.result.ids for r in rows])
             print(f"loaded {type(index).__name__} from {args.index_dir}; "
@@ -256,6 +362,17 @@ def main(argv=None):
                     raise SystemExit(
                         "inserted prompts did not retrieve themselves"
                     )
+            if obs_server is not None:
+                if args.obs_selfcheck:
+                    _obs_selfcheck(obs_server, engine)
+                obs_server.close()
+
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(
+            f"trace: {len(tracer)} spans -> {args.trace_out} "
+            f"(render: python -m repro.obs.report {args.trace_out})"
+        )
 
     t0 = time.perf_counter()
     out = generate(state.params, arch, prompts, args.gen)

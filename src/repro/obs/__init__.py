@@ -1,0 +1,47 @@
+"""Observability subsystem: request tracing, metrics exposition, search
+profiling.
+
+Three layers, each usable on its own:
+
+  * :mod:`repro.obs.trace` — a lightweight thread-safe span tracer
+    (bounded ring buffer, injected monotonic clock, ~zero cost when
+    disabled) the serving stack threads through the whole query path:
+    ``submit -> queue_wait -> batch_assemble -> compile ->
+    device_dispatch -> demux``, plus child spans for semantic-cache
+    lookups, streaming-tier host page fetches, and mutable-index writes.
+    Exports Chrome ``trace_event`` JSON so a request's life is viewable
+    in Perfetto (https://ui.perfetto.dev).
+  * :mod:`repro.obs.metrics` — a registry of named counters / gauges /
+    histograms wrapping the existing ``EngineMetrics`` / ``CacheStats`` /
+    compile-cache / fetch counters as sources, rendered as Prometheus
+    text exposition; :mod:`repro.obs.server` serves it over a tiny stdlib
+    ``http.server`` sidecar (``/metrics``, ``/healthz``, ``/stats``).
+  * per-hop search profiling — ``PageANNIndex.profile(queries)``
+    (``core.search.profile_search``) captures the beam's per-hop trail
+    without touching the compiled fast path; ``python -m
+    repro.obs.report`` renders a trace or profile into a human-readable
+    phase breakdown.
+
+The serving layer never imports this package on its hot path — tracers
+and registries are injected (duck-typed), so observability stays an
+opt-in layer, not a dependency of the query loop.
+"""
+from repro.obs.metrics import (
+    MetricsRegistry,
+    parse_prometheus_text,
+    sample_value,
+    serve_registry,
+)
+from repro.obs.server import MetricsServer
+from repro.obs.trace import NULL_TRACER, Span, Tracer
+
+__all__ = [
+    "MetricsRegistry",
+    "MetricsServer",
+    "NULL_TRACER",
+    "Span",
+    "Tracer",
+    "parse_prometheus_text",
+    "sample_value",
+    "serve_registry",
+]

@@ -79,6 +79,22 @@ class RequestResult(NamedTuple):
 
 
 class EngineMetrics(NamedTuple):
+    """One lock-consistent snapshot of the engine's serving counters.
+
+    ``metrics()`` captures EVERY source — engine counters and windows,
+    compile-cache hit/miss totals, and each streamed collection's live
+    fetch counters — under one acquisition of the engine lock, at one
+    snapshot instant. Monotonicity contract: the cumulative counters
+    (``requests``, ``batches``, ``inserts``, ``deletes``,
+    ``compactions``, ``early_exits``, ``compile_*``, ``pages_fetched``,
+    ``fetch_hits``, ``fetch_wall_s``, ``semantic_*``) never decrease
+    across successive snapshots of one engine, and no counter can run
+    ahead of the ``requests`` it belongs to within a snapshot — safe to
+    export as Prometheus counters and ``rate()`` over. The remaining
+    fields (qps, latency/hops/ios aggregates, occupancy) are gauges
+    derived from bounded trailing windows and move both ways.
+    """
+
     requests: int
     batches: int
     # completed requests / wall-clock between the first submit and the most
@@ -125,6 +141,7 @@ class _Pending(NamedTuple):
     query: np.ndarray
     k: int               # the k the caller asked for (<= the group's k bin)
     t_submit: float
+    rid: int             # engine-wide request id (trace span track key)
 
 
 class _Collection(NamedTuple):
@@ -168,6 +185,7 @@ class BatchingEngine:
         delete_fn: Callable[[Any], int] | None = None,
         compact_fn: Callable[[], bool] | None = None,
         compile_cache: CompileCache | None = None,
+        tracer=None,
     ):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -186,6 +204,12 @@ class BatchingEngine:
         self._timer_gen = 0     # invalidates stale timers (see _flush_due)
         self._closed = False
         self._compile_cache = compile_cache or CompileCache()
+        # request tracing (duck-typed — anything with .enabled/.add; see
+        # repro.obs.trace.Tracer). Spans are stamped with the ENGINE's
+        # injected clock via tracer.add, so a fake engine clock yields a
+        # coherent trace. None = tracing off with zero hot-path cost.
+        self._tracer = tracer
+        self._rid = 0
         # aggregate counters (window-bounded where they would otherwise grow)
         self._latencies_ms: collections.deque = collections.deque(
             maxlen=latency_window
@@ -303,6 +327,12 @@ class BatchingEngine:
             delete_fn = delete_fn or getattr(index, "delete", None)
             compact_fn = compact_fn or getattr(index, "compact", None)
             fetch_stats_fn = getattr(index, "fetch_stats", None)
+            # streamed indexes: hang the engine's tracer on the host-side
+            # page fetcher so per-hop fetch callbacks show up as child
+            # spans of the dispatch that triggered them
+            fetcher = getattr(index, "fetcher", None)
+            if fetcher is not None and self._tracer is not None:
+                fetcher.tracer = self._tracer
         else:
             fetch_stats_fn = None
         if search_fn is None or dim is None:
@@ -437,6 +467,7 @@ class BatchingEngine:
         key = (col.name, self._bin_k(k), params, filter)
         fut: Future = Future()
         batch = None
+        tr = self._tracer
         with self._lock:
             if self._closed:
                 raise RuntimeError("engine is closed")
@@ -447,12 +478,19 @@ class BatchingEngine:
                 raise KeyError(f"no collection {col.name!r}")
             if self._t_first is None:
                 self._t_first = self._clock()
+            self._rid += 1
+            rid = self._rid
+            t_submit = self._clock()
             group = self._pending.setdefault(key, [])
-            group.append(_Pending(fut, q, k, self._clock()))
+            group.append(_Pending(fut, q, k, t_submit, rid))
             if len(group) >= self._batch_size:
                 batch = self._take_locked(key)
             else:
                 self._arm_timer_locked()
+        if tr is not None and tr.enabled:
+            tr.add("submit", t_submit, t_submit, cat="request",
+                   track=f"req-{rid}",
+                   args={"collection": col.name, "k": k})
         if batch is not None:
             self._run_batch(key, batch)
         return fut
@@ -519,11 +557,17 @@ class BatchingEngine:
             if self._closed:
                 raise RuntimeError("engine is closed")
         vectors = np.asarray(vectors, self._dtype).reshape(-1, col.dim)
+        tr = self._tracer
+        tracing = tr is not None and tr.enabled
+        t0 = self._clock() if tracing else 0.0
         out = (
             col.insert_fn(vectors, ids, metadata=metadata)
             if metadata is not None
             else col.insert_fn(vectors, ids)
         )
+        if tracing:
+            tr.add("insert", t0, self._clock(), cat="write", track="writes",
+                   args={"collection": col.name, "rows": vectors.shape[0]})
         with self._lock:
             self._inserts += vectors.shape[0]
         return out
@@ -539,7 +583,13 @@ class BatchingEngine:
         with self._lock:
             if self._closed:
                 raise RuntimeError("engine is closed")
+        tr = self._tracer
+        tracing = tr is not None and tr.enabled
+        t0 = self._clock() if tracing else 0.0
         removed = col.delete_fn(ids)
+        if tracing:
+            tr.add("delete", t0, self._clock(), cat="write", track="writes",
+                   args={"collection": col.name, "removed": int(removed)})
         with self._lock:
             self._deletes += removed
         return removed
@@ -553,7 +603,13 @@ class BatchingEngine:
             raise RuntimeError(
                 f"collection {col.name!r} does not support compact"
             )
+        tr = self._tracer
+        tracing = tr is not None and tr.enabled
+        t0 = self._clock() if tracing else 0.0
         did = col.compact_fn()
+        if tracing:
+            tr.add("compact", t0, self._clock(), cat="write", track="writes",
+                   args={"collection": col.name, "compacted": bool(did)})
         if did:
             with self._lock:
                 self._compactions += 1
@@ -660,6 +716,9 @@ class BatchingEngine:
         name, k_bin, params, flt = key
         batch_index, take = batch
         n = len(take)
+        tr = self._tracer
+        tracing = tr is not None and tr.enabled
+        t_take = self._clock() if tracing else 0.0
         with self._lock:
             col = self._collections.get(name)
         if col is None:
@@ -687,10 +746,20 @@ class BatchingEngine:
             )
         except Exception:
             resolved = (k_bin, params)
-        self._compile_cache.note(
+        warm = self._compile_cache.note(
             col.geometry + (self._batch_size, resolved)
             + ((("filter", flt),) if flt is not None else ())
         )
+        if tracing:
+            t_pad = self._clock()
+            tr.add("batch_assemble", t_take, t_pad, cat="engine",
+                   track="engine",
+                   args={"collection": name, "batch_index": batch_index,
+                         "n": n})
+            for p in take:
+                tr.add("queue_wait", p.t_submit, t_take, cat="request",
+                       track=f"req-{p.rid}")
+        t_call = self._clock() if tracing else 0.0
         try:
             out = (
                 col.search_fn(padded, k_bin, params, flt)
@@ -711,6 +780,16 @@ class BatchingEngine:
             return
 
         t_done = self._clock()
+        if tracing:
+            # a cold dispatch's wall includes trace+compile: overlay a
+            # "compile" span on the dispatch that paid it
+            tr.add("device_dispatch", t_call, t_done, cat="engine",
+                   track="engine",
+                   args={"collection": name, "batch_index": batch_index,
+                         "n": n, "compiled": not warm})
+            if not warm:
+                tr.add("compile", t_call, t_done, cat="compile",
+                       track="engine", args={"collection": name})
         ios = getattr(out, "ios", None)
         hops = getattr(out, "hops", None)
         latencies = [(t_done - p.t_submit) * 1e3 for p in take]
@@ -750,26 +829,41 @@ class BatchingEngine:
                     batch_index=batch_index,
                 )
             )
+        if tracing:
+            t_end = self._clock()
+            tr.add("demux", t_done, t_end, cat="engine", track="engine",
+                   args={"batch_index": batch_index, "n": n})
+            for i, p in enumerate(take):
+                tr.add("request", p.t_submit, t_end, cat="request",
+                       track=f"req-{p.rid}",
+                       args={"latency_ms": latencies[i],
+                             "batch_index": batch_index})
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> EngineMetrics:
-        cc = self._compile_cache.stats()
+        """One atomic, lock-consistent snapshot (see ``EngineMetrics``).
+
+        Everything — windows, counters, compile-cache stats, and each
+        streamed collection's live fetch counters — is captured under a
+        SINGLE acquisition of the engine lock, so a snapshot taken while
+        the dispatch/timer threads run never mixes a group of counters
+        from before a batch with a group from after it (two separate
+        lock sections here used to let ``fetch_wall_s`` run ahead of the
+        ``requests`` it belonged to). The compile-cache and fetcher
+        locks are leaf locks — their holders never call back into the
+        engine — so taking them under the engine lock cannot deadlock.
+        """
         with self._lock:
-            fetch_fns = [
-                c.fetch_stats_fn
-                for c in self._collections.values()
-                if c.fetch_stats_fn is not None
-            ]
-        # backend counters are read outside the engine lock (each fetcher
-        # has its own lock); summed across every streamed collection
-        pages_fetched = fetch_hits = 0
-        fetch_wall_s = 0.0
-        for fn in fetch_fns:
-            fs = fn()
-            pages_fetched += int(fs.get("pages_fetched", 0))
-            fetch_hits += int(fs.get("fetch_hits", 0))
-            fetch_wall_s += float(fs.get("fetch_wall_s", 0.0))
-        with self._lock:
+            cc = self._compile_cache.stats()
+            pages_fetched = fetch_hits = 0
+            fetch_wall_s = 0.0
+            for c in self._collections.values():
+                if c.fetch_stats_fn is None:
+                    continue
+                fs = c.fetch_stats_fn()
+                pages_fetched += int(fs.get("pages_fetched", 0))
+                fetch_hits += int(fs.get("fetch_hits", 0))
+                fetch_wall_s += float(fs.get("fetch_wall_s", 0.0))
             lat = np.asarray(self._latencies_ms, np.float64)
             hops_win = np.asarray(self._hops_win, np.float64)
             ios_win = np.asarray(self._ios_win, np.float64)
@@ -815,6 +909,26 @@ class BatchingEngine:
                     float(np.percentile(ios_win, 99)) if len(ios_win) else 0.0
                 ),
                 early_exits=self._early_exits,
+            )
+
+    def metrics_windows(self) -> dict:
+        """The raw trailing windows behind the quantile gauges, as one
+        atomic snapshot: ``latency_ms`` / ``hops`` / ``ios`` (the
+        bounded per-request deques) plus ``fetch_wall_s`` (per-callback
+        wall seconds from every streamed collection's fetcher, itself
+        window-bounded). Feed of the exposition layer's histograms —
+        window-scoped distributions, not cumulative series."""
+        with self._lock:
+            wall: list = []
+            for c in self._collections.values():
+                if c.fetch_stats_fn is None:
+                    continue
+                wall.extend(c.fetch_stats_fn().get("wall_window", ()))
+            return dict(
+                latency_ms=np.asarray(self._latencies_ms, np.float64),
+                hops=np.asarray(self._hops_win, np.float64),
+                ios=np.asarray(self._ios_win, np.float64),
+                fetch_wall_s=np.asarray(wall, np.float64),
             )
 
     # ------------------------------------------------------------- builders

@@ -89,6 +89,10 @@ class SemanticCache:
         self._misses = 0
         self._evictions = 0
         self._invalidations = 0
+        # optional span tracer (duck-typed, see repro.obs.trace.Tracer),
+        # attached by VectorService; lookups emit "semantic_lookup" spans
+        # stamped with the tracer's own clock
+        self.tracer = None
 
     @staticmethod
     def _normalize(query: np.ndarray) -> np.ndarray | None:
@@ -101,6 +105,16 @@ class SemanticCache:
     def get(self, scope: Hashable, query: np.ndarray):
         """Best cached result within ``threshold`` of ``query`` under
         ``scope``, or None. A hit refreshes the entry's LRU recency."""
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            t0 = tr.now()
+            out = self._get(scope, query)
+            tr.add("semantic_lookup", t0, tr.now(), cat="cache",
+                   track="semantic-cache", args={"hit": out is not None})
+            return out
+        return self._get(scope, query)
+
+    def _get(self, scope: Hashable, query: np.ndarray):
         v = self._normalize(query)
         with self._lock:
             if v is None or not self._scopes.get(scope):

@@ -42,6 +42,7 @@ see ``repro.core.persist.save_database``.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 from concurrent.futures import Future
 from typing import Any, Iterator
@@ -110,17 +111,26 @@ class VectorService:
         k_bins: tuple[int, ...] | None = None,
         compile_cache: CompileCache | None = None,
         semantic_cache: SemanticCache | None = None,
+        tracer=None,
         **engine_kwargs: Any,
     ):
         self._compile_cache = compile_cache or CompileCache()
+        # the tracer (duck-typed, see repro.obs.trace.Tracer) is threaded
+        # down into the engine (request/dispatch spans), the semantic
+        # cache (lookup spans), and — via add_collection — any streamed
+        # collection's PageFetcher (host-fetch spans)
+        self._tracer = tracer
         self._engine = BatchingEngine(
             batch_size=batch_size,
             timeout_ms=timeout_ms,
             k_bins=k_bins,
             compile_cache=self._compile_cache,
+            tracer=tracer,
             **engine_kwargs,
         )
         self._semantic_cache = semantic_cache
+        if semantic_cache is not None and tracer is not None:
+            semantic_cache.tracer = tracer
         self._lock = threading.Lock()
         self._indexes: dict[str, Any] = {}
         # per-collection write generation: bumped by insert/delete/compact/
@@ -412,6 +422,31 @@ class VectorService:
                 semantic_invalidations=cs.invalidations,
             )
         return m
+
+    def metrics_windows(self) -> dict:
+        """The engine's trailing metric windows (latency/hops/ios/fetch
+        wall) in one atomic snapshot — the exposition layer's histogram
+        feed (see ``BatchingEngine.metrics_windows``)."""
+        return self._engine.metrics_windows()
+
+    def stats(self) -> dict:
+        """Per-collection index stats keyed by collection name, as plain
+        dicts (dataclass stats flattened recursively — a mutable index
+        nests its base's ``BuildStats`` under ``"base"``). Includes the
+        residency split (``resident_pages``/``resident_bytes`` vs
+        ``pages``/``disk_bytes``) for streamed collections — the
+        ``/stats`` endpoint's payload."""
+        with self._lock:
+            snapshot = dict(self._indexes)
+        out: dict[str, dict] = {}
+        for name, idx in snapshot.items():
+            st = getattr(idx, "stats", None)
+            if dataclasses.is_dataclass(st) and not isinstance(st, type):
+                st = dataclasses.asdict(st)
+            elif hasattr(st, "_asdict"):
+                st = st._asdict()
+            out[name] = st if isinstance(st, dict) else {}
+        return out
 
     # ------------------------------------------------------------ lifecycle
     def save(self, directory: str) -> None:

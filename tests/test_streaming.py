@@ -240,7 +240,7 @@ def test_fetcher_lru_eviction_stays_correct():
     assert fs["pages_fetched"] >= 6                   # capacity-1 thrashing
     f.reset_stats()
     assert f.fetch_stats() == dict(
-        pages_fetched=0, fetch_hits=0, fetch_wall_s=0.0
+        pages_fetched=0, fetch_hits=0, fetch_wall_s=0.0, wall_window=()
     )
 
 
