@@ -55,6 +55,17 @@ def build_sharded_index(
 
     parts = partition_vectors(x, num_shards, cfg.seed)
     idxs = [PageANNIndex.build(x[p], cfg) for p in parts]
+    return stack_shards(idxs, parts)
+
+
+def stack_shards(idxs, parts) -> ShardedIndex:
+    """Stack already-built per-shard sub-indexes (``PageANNIndex`` each,
+    over the id slices in ``parts``) into one ``ShardedIndex`` whose leaves
+    carry a leading shard axis — the shard_map input layout.  Ragged shards
+    are padded to the largest shard's page count; the pad slots carry
+    member_count 0 / PAD ids, and the merge in :func:`make_sharded_search`
+    masks them out explicitly."""
+    num_shards = len(idxs)
     max_pages = max(i.store.num_pages for i in idxs)
     cap = idxs[0].store.capacity
 
@@ -138,12 +149,23 @@ def make_sharded_search(
         res = search_mod.batch_search(
             q_blk, data, p, capacity=capacity, mode=mode
         )
-        # tag ids with shard so the merge can translate back
-        sid = jax.lax.axis_index(shard_axis)
-        tagged = jnp.where(res.ids >= 0, res.ids, PAD)
+        # Mask pad-slot candidates BEFORE the cross-shard merge.  A ragged
+        # partition pads every shard to the largest shard's page count, so a
+        # shard-local id can point at a pad slot (slot >= member_count of
+        # its page, or a wholly padded page with member_count 0).  The
+        # search kernel masks those to inf today, but the merge must not
+        # depend on that: a pad candidate that ranked would displace a real
+        # candidate from another shard and surface as PAD after
+        # ``translate_ids``.  Validity is derivable on-device from
+        # member_count alone, so enforce it here.
+        page = jnp.clip(res.ids, 0) // capacity
+        slot = jnp.clip(res.ids, 0) % capacity
+        real = (res.ids >= 0) & (slot < data.member_count[page])
+        tagged = jnp.where(real, res.ids, PAD)
+        dists = jnp.where(real, res.dists, jnp.inf)
         # gather every shard's candidates for these queries
         all_ids = jax.lax.all_gather(tagged, shard_axis)        # (S, q, k)
-        all_d = jax.lax.all_gather(res.dists, shard_axis)       # (S, q, k)
+        all_d = jax.lax.all_gather(dists, shard_axis)           # (S, q, k)
         all_io = jax.lax.all_gather(res.ios, shard_axis)        # (S, q)
         s, qn, _ = all_ids.shape
         shard_tag = jnp.arange(s, dtype=jnp.int32)[:, None, None]

@@ -756,6 +756,11 @@ def load_index(directory: str, *, memory_budget=None):
         return load_pageann(directory, memory_budget=memory_budget)
     if kind == "mutable":
         return load_mutable(directory, memory_budget=memory_budget)
+    if kind == "sharded":
+        # lazy: repro.dist sits above core and imports this module
+        from repro.dist.sharded import ShardedPageStore
+
+        return ShardedPageStore.load(directory, memory_budget=memory_budget)
     if kind in bl.BASELINE_KINDS:
         if memory_budget is not None:
             raise ValueError(

@@ -1,0 +1,13 @@
+"""Data-sharded scale-out: partition one collection's pages across shards.
+
+:mod:`repro.core.distributed` holds the device-level machinery (shard_map
+over a mesh, all_gather merge); this package wraps it in the index
+lifecycle contract so a sharded collection plugs into
+``BatchingEngine``/``VectorService``/``persist`` exactly like a single
+:class:`~repro.core.index.PageANNIndex` — build, search, save as
+``shard-<i>/`` artifacts under one ``kind="sharded"`` manifest, reload
+through ``load_index``.
+"""
+from repro.dist.sharded import ShardedPageStore, shard_params_for
+
+__all__ = ["ShardedPageStore", "shard_params_for"]

@@ -94,6 +94,44 @@ def _start_obs(args, source):
     return server
 
 
+def _parse_rate_limits(specs):
+    """['wiki=200:400', 'notes=50'] -> {'wiki': (200.0, 400.0),
+    'notes': (50.0, 50.0)} (burst defaults to the rate)."""
+    out = {}
+    for spec in specs or ():
+        name, _, rhs = spec.partition("=")
+        if not name or not rhs:
+            raise SystemExit(f"--rate-limit {spec!r}: want COLL=RATE[:BURST]")
+        rate, _, burst = rhs.partition(":")
+        try:
+            r = float(rate)
+            b = float(burst) if burst else r
+        except ValueError:
+            raise SystemExit(f"--rate-limit {spec!r}: bad number")
+        out[name] = (r, b)
+    return out
+
+
+def _start_frontend(args, svc):
+    """Warm each collection's serving executable, then open the network
+    frontend — external load must not pay first-dispatch compile."""
+    from repro.serve.http import HttpFrontend
+
+    for name in svc.list_collections():
+        dim = svc.index_of(name).dim
+        svc.search(name, np.zeros((1, dim), np.float32))
+    frontend = HttpFrontend(
+        svc,
+        port=args.http_port,
+        max_inflight=args.max_inflight,
+        default_deadline_ms=args.default_deadline_ms,
+        rate_limits=_parse_rate_limits(args.rate_limit),
+    )
+    # the load generator greps this line for the bound address
+    print(f"frontend: {frontend.url}", flush=True)
+    return frontend
+
+
 def _obs_selfcheck(server, source):
     """Scrape the process's own sidecar over real HTTP and reconcile the
     exposition against a fresh ``metrics()`` snapshot (no concurrent
@@ -197,6 +235,38 @@ def main(argv=None):
              "an ephemeral port and print it). Default: no sidecar",
     )
     ap.add_argument(
+        "--http-port", type=int, default=None, metavar="PORT",
+        help="(with --db-dir) start the network frontend on this port: "
+             "POST /search /insert /delete + GET /collections over the "
+             "loaded database, with admission control and per-collection "
+             "QoS; /metrics, /healthz and /stats are mounted on the same "
+             "port (0 = ephemeral, printed as 'frontend: URL')",
+    )
+    ap.add_argument(
+        "--max-inflight", type=int, default=64,
+        help="frontend admission control: maximum concurrently admitted "
+             "requests; excess requests are shed with 503 (default 64)",
+    )
+    ap.add_argument(
+        "--default-deadline-ms", type=float, default=None, metavar="MS",
+        help="frontend: default per-request queue deadline; a request "
+             "still queued when it expires completes with 504 and counts "
+             "as an engine shed. Per-request 'deadline_ms' overrides",
+    )
+    ap.add_argument(
+        "--rate-limit", action="append", default=None,
+        metavar="COLL=RATE[:BURST]",
+        help="frontend QoS: token-bucket limit for one collection "
+             "(requests/s, optional burst, e.g. 'wiki=200:400'); repeat "
+             "per collection. Unlisted collections are unlimited",
+    )
+    ap.add_argument(
+        "--serve-forever", action="store_true",
+        help="(with --http-port) block serving HTTP until interrupted "
+             "instead of exiting after the smoke retrievals — the mode "
+             "an external load generator drives",
+    )
+    ap.add_argument(
         "--trace-out", default=None, metavar="FILE",
         help="thread a request tracer through the serving path and write "
              "the captured spans as Chrome trace_event JSON (view in "
@@ -211,6 +281,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.obs_selfcheck and args.metrics_port is None:
         raise SystemExit("--obs-selfcheck needs --metrics-port")
+    if args.http_port is not None and not args.db_dir:
+        raise SystemExit("--http-port needs --db-dir (a database to serve)")
+    if args.serve_forever and args.http_port is None:
+        raise SystemExit("--serve-forever needs --http-port")
     if (args.metrics_port is not None or args.trace_out) and not (
         args.db_dir or args.index_dir
     ):
@@ -273,7 +347,18 @@ def main(argv=None):
                     f"--route names unknown collections {unknown}; "
                     f"database has {sorted(names)}"
                 )
-            targets = [route[i % len(route)] for i in range(len(emb))]
+            # the prompt-retrieval demo only makes sense against
+            # collections in the model's embedding space; a pure serving
+            # database (arbitrary dim, fronted over HTTP) skips it
+            demo = [n for n in route if svc.index_of(n).dim == emb.shape[1]]
+            if not demo and args.http_port is None:
+                raise SystemExit(
+                    f"prompt embedding dim {emb.shape[1]} matches no "
+                    f"routed collection (dims: "
+                    f"{ {n: svc.index_of(n).dim for n in route} })"
+                )
+            targets = [demo[i % len(demo)] for i in range(len(emb))] \
+                if demo else []
             futs = [
                 svc.submit(coll, e, k=args.retrieve_k)
                 for coll, e in zip(targets, emb)
@@ -289,7 +374,7 @@ def main(argv=None):
             for i, (coll, fut) in enumerate(zip(targets, futs)):
                 ids = np.asarray(fut.result().result.ids)
                 print(f"prompt {i} -> :{coll} -> ids {ids}")
-            if semantic_cache is not None:
+            if semantic_cache is not None and targets:
                 # replay the same prompts: every retrieval should now be a
                 # cache hit (an already-completed future, no dispatch)
                 replay = [
@@ -304,6 +389,15 @@ def main(argv=None):
                     f"replay served {cached}/{len(replay)} from cache; "
                     f"{m.semantic_hits} hits / {m.semantic_misses} misses"
                 )
+            if args.http_port is not None:
+                frontend = _start_frontend(args, svc)
+                if args.serve_forever:
+                    try:
+                        while True:
+                            time.sleep(3600)
+                    except KeyboardInterrupt:
+                        pass
+                frontend.close()
             if obs_server is not None:
                 if args.obs_selfcheck:
                     _obs_selfcheck(obs_server, svc)

@@ -268,6 +268,8 @@ _ENGINE_FIELDS = {
                     "Delta-tier compactions folded into the base"),
     "early_exits": ("early_exits_total", "counter",
                     "Requests whose search exited before params.max_hops"),
+    "sheds": ("sheds_total", "counter",
+              "Requests shed by deadline expiry while queued"),
     "compile_hits": ("compile_hits_total", "counter",
                      "Dispatches served by an already-warm executable"),
     "compile_misses": ("compile_misses_total", "counter",

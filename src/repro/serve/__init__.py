@@ -5,6 +5,7 @@ from repro.serve.engine import (
     EngineMetrics,
     RequestResult,
 )
+from repro.serve.http import HttpFrontend, TokenBucket
 from repro.serve.semantic_cache import CacheStats, SemanticCache
 from repro.serve.service import CollectionHandle, VectorService
 
@@ -16,7 +17,9 @@ __all__ = [
     "CompileCacheStats",
     "DEFAULT_COLLECTION",
     "EngineMetrics",
+    "HttpFrontend",
     "RequestResult",
     "SemanticCache",
+    "TokenBucket",
     "VectorService",
 ]

@@ -128,6 +128,10 @@ class EngineMetrics(NamedTuple):
     # requests whose search exited before the resolved params' max_hops
     # (early termination, beam exhaustion, or convergence)
     early_exits: int = 0
+    # requests whose deadline_ms passed while still queued: completed
+    # exceptionally with TimeoutError, never dispatched (admission
+    # control's load-shedding signal)
+    sheds: int = 0
     # semantic query cache (populated by VectorService when one is
     # installed; the bare engine reports zeros)
     semantic_hits: int = 0          # submits served from the cache
@@ -142,6 +146,10 @@ class _Pending(NamedTuple):
     k: int               # the k the caller asked for (<= the group's k bin)
     t_submit: float
     rid: int             # engine-wide request id (trace span track key)
+    # absolute engine-clock time after which this request is shed instead
+    # of dispatched (None = wait forever). Expiry applies only while
+    # QUEUED: once taken into a batch the request completes normally.
+    deadline: float | None = None
 
 
 class _Collection(NamedTuple):
@@ -164,6 +172,11 @@ class _Collection(NamedTuple):
     # for index-backed collections whose search exposes filter=; raw
     # three-arg closures reject filtered submits up front
     accepts_filter: bool = False
+    # QoS dispatch weight: when several groups are due, the one with the
+    # highest priority * queue-age dispatches first (weighted aging —
+    # high-priority collections win contended slots, low-priority ones
+    # age their way in instead of starving)
+    priority: float = 1.0
 
 
 class BatchingEngine:
@@ -222,6 +235,7 @@ class BatchingEngine:
             maxlen=latency_window
         )
         self._early_exits = 0
+        self._sheds = 0
         self._inserts = 0
         self._deletes = 0
         self._compactions = 0
@@ -281,6 +295,7 @@ class BatchingEngine:
         geometry: tuple | None = None,
         resolve_fn: Callable | None = None,
         mesh=None,
+        priority: float = 1.0,
     ) -> None:
         """Register a named collection on the shared batching core.
 
@@ -293,6 +308,9 @@ class BatchingEngine:
         """
         if not name or not isinstance(name, str):
             raise ValueError("collection name must be a non-empty string")
+        priority = float(priority)
+        if not priority > 0:
+            raise ValueError("priority must be > 0")
         accepts_filter = False
         if index is not None:
             if search_fn is not None:
@@ -357,6 +375,7 @@ class BatchingEngine:
             compact_fn=compact_fn,
             fetch_stats_fn=fetch_stats_fn,
             accepts_filter=accepts_filter,
+            priority=priority,
         )
         with self._lock:
             if self._closed:
@@ -434,6 +453,7 @@ class BatchingEngine:
         params: SearchParams | None = None,
         collection: str | None = None,
         filter=None,
+        deadline_ms: float | None = None,
     ) -> Future:
         """Enqueue one (d,) query; returns a Future[RequestResult].
 
@@ -443,7 +463,15 @@ class BatchingEngine:
         key: a batch is a SINGLE backend call, and the predicate is a
         static argument of its compiled program — two requests with
         different predicates can never share a dispatch.
+
+        ``deadline_ms`` bounds QUEUE time: a request still pending when
+        its deadline passes completes exceptionally with ``TimeoutError``
+        (counted as ``sheds`` in :class:`EngineMetrics`) instead of
+        waiting forever. Once taken into a batch it completes normally —
+        the deadline sheds load, it does not cancel dispatched work.
         """
+        if deadline_ms is not None and not deadline_ms > 0:
+            raise ValueError("deadline_ms must be > 0")
         col = self._resolve_collection(collection)
         if filter is not None and not col.accepts_filter:
             raise ValueError(
@@ -481,37 +509,57 @@ class BatchingEngine:
             self._rid += 1
             rid = self._rid
             t_submit = self._clock()
+            deadline = (
+                t_submit + deadline_ms / 1e3 if deadline_ms is not None
+                else None
+            )
             group = self._pending.setdefault(key, [])
-            group.append(_Pending(fut, q, k, t_submit, rid))
+            group.append(_Pending(fut, q, k, t_submit, rid, deadline))
             if len(group) >= self._batch_size:
-                batch = self._take_locked(key)
+                batch, shed = self._take_locked(key)
             else:
+                shed = ()
                 self._arm_timer_locked()
         if tr is not None and tr.enabled:
             tr.add("submit", t_submit, t_submit, cat="request",
                    track=f"req-{rid}",
                    args={"collection": col.name, "k": k})
+        self._fail_shed(shed)
         if batch is not None:
             self._run_batch(key, batch)
         return fut
 
     def flush(self, collection: str | None = None) -> None:
         """Dispatch whatever is pending — in every group, or only the named
-        collection's groups — padding ragged batches."""
+        collection's groups — padding ragged batches. When several groups
+        are eligible the highest ``priority * queue-age`` dispatches
+        first (weighted aging: see ``add_collection(priority=)``)."""
         while True:
             with self._lock:
-                key = next(
-                    (
-                        key
-                        for key, grp in self._pending.items()
-                        if grp and (collection is None or key[0] == collection)
-                    ),
-                    None,
+                key = self._next_key_locked(collection)
+                batch, shed = (
+                    self._take_locked(key) if key is not None else (None, ())
                 )
-                batch = self._take_locked(key) if key is not None else None
+            self._fail_shed(shed)
             if batch is None:
                 return
             self._run_batch(key, batch)
+
+    def _next_key_locked(self, collection: str | None = None):
+        """Pick the next pending group to dispatch: weighted aging over
+        collection priorities. Caller must hold the lock."""
+        now = self._clock()
+        best_key, best_rank = None, -1.0
+        for key, grp in self._pending.items():
+            if not grp or (collection is not None and key[0] != collection):
+                continue
+            col = self._collections.get(key[0])
+            weight = col.priority if col is not None else 1.0
+            # +1ms age floor so brand-new groups still rank by priority
+            rank = weight * (now - grp[0].t_submit + 1e-3)
+            if rank > best_rank:
+                best_key, best_rank = key, rank
+        return best_key
 
     def search(
         self,
@@ -642,57 +690,146 @@ class BatchingEngine:
             if gen != self._timer_gen or self._closed:
                 return
             self._timer = None
-        deadline_s = self._timeout_ms / 1e3
+        timeout_s = (
+            self._timeout_ms / 1e3 if self._timeout_ms is not None else None
+        )
         while True:
             with self._lock:
                 now = self._clock()
-                key = next(
-                    (
+                # reap requests whose per-request deadline expired while
+                # queued — they complete with TimeoutError, not a dispatch
+                shed = self._reap_expired_locked(now)
+                key = None
+                if timeout_s is not None:
+                    due = [
                         key
                         for key, grp in self._pending.items()
-                        if grp and now - grp[0].t_submit >= deadline_s
-                    ),
-                    None,
-                )
-                batch = self._take_locked(key) if key is not None else None
-                if batch is None:
+                        if grp and now - grp[0].t_submit >= timeout_s
+                    ]
+                    if due:
+                        # among due groups, weighted priority picks first
+                        key = max(
+                            due,
+                            key=lambda kk: (
+                                getattr(
+                                    self._collections.get(kk[0]), "priority",
+                                    1.0,
+                                )
+                                * (now - self._pending[kk][0].t_submit)
+                            ),
+                        )
+                if key is not None:
+                    batch, shed2 = self._take_locked(key)
+                    shed += shed2
+                else:
+                    batch = None
                     self._arm_timer_locked()
-                    return
+            self._fail_shed(shed)
+            if batch is None:
+                return
             self._run_batch(key, batch)
+
+    def _reap_expired_locked(self, now: float) -> list[_Pending]:
+        """Drop every queued request whose deadline has passed; returns
+        them for the caller to fail OUTSIDE the lock (Future callbacks run
+        inline). Caller must hold the lock."""
+        shed: list[_Pending] = []
+        for key in list(self._pending):
+            grp = self._pending[key]
+            keep = [p for p in grp if p.deadline is None or p.deadline > now]
+            if len(keep) != len(grp):
+                shed.extend(
+                    p for p in grp if p.deadline is not None
+                    and p.deadline <= now
+                )
+                if keep:
+                    self._pending[key] = keep
+                else:
+                    self._pending.pop(key, None)
+        self._sheds += len(shed)
+        return shed
+
+    def _fail_shed(self, shed) -> None:
+        """Complete shed requests exceptionally — never under the engine
+        lock (``Future.set_exception`` runs done-callbacks inline)."""
+        tr = self._tracer
+        for p in shed:
+            if tr is not None and tr.enabled:
+                now = self._clock()
+                tr.add("shed", p.t_submit, now, cat="request",
+                       track=f"req-{p.rid}")
+            p.future.set_exception(
+                TimeoutError(
+                    f"request {p.rid} deadline passed after "
+                    f"{(self._clock() - p.t_submit) * 1e3:.1f}ms in queue"
+                )
+            )
 
     def _arm_timer_locked(self) -> None:
         """Start the timeout timer if requests are pending and none is live.
         The delay is measured from the OLDEST pending submit, not reset to
         the full duration — otherwise steady full-batch traffic in one
-        group would push a sparse group's deadline out forever. Caller must
-        hold the lock."""
+        group would push a sparse group's deadline out forever. Pending
+        per-request deadlines arm the timer too (even with no engine
+        timeout configured), so an expired request is reaped promptly
+        rather than on the next unrelated dispatch. Caller must hold the
+        lock."""
         if (
-            self._timeout_ms is not None
-            and self._timer is None
-            and not self._closed
-            and any(self._pending.values())
+            self._timer is not None
+            or self._closed
+            or not any(self._pending.values())
         ):
+            return
+        now = self._clock()
+        delays = []
+        if self._timeout_ms is not None:
             oldest = min(
                 p.t_submit for grp in self._pending.values() for p in grp
             )
-            delay = max(
-                0.0, self._timeout_ms / 1e3 - (self._clock() - oldest)
-            )
-            gen = self._timer_gen
-            self._timer = threading.Timer(
-                delay, self._flush_due, args=(gen,)
-            )
-            self._timer.daemon = True
-            self._timer.start()
+            delays.append(self._timeout_ms / 1e3 - (now - oldest))
+        deadlines = [
+            p.deadline
+            for grp in self._pending.values()
+            for p in grp
+            if p.deadline is not None
+        ]
+        if deadlines:
+            delays.append(min(deadlines) - now)
+        if not delays:
+            return
+        delay = max(0.0, min(delays))
+        gen = self._timer_gen
+        self._timer = threading.Timer(
+            delay, self._flush_due, args=(gen,)
+        )
+        self._timer.daemon = True
+        self._timer.start()
 
-    def _take_locked(self, key: tuple) -> tuple[int, list[_Pending]]:
+    def _take_locked(
+        self, key: tuple
+    ) -> tuple[tuple[int, list[_Pending]] | None, list[_Pending]]:
         """Pop up to batch_size pending requests of one group and retire the
         live timer — re-arming it when OTHER groups still hold pending
         requests, so a size-triggered dispatch of one (collection, k-bin,
-        params) group never strands another group's waiters. Caller must
-        hold the lock; the batch index is assigned here so dispatch order
-        matches take order even with concurrent submitters."""
+        params) group never strands another group's waiters. Requests
+        whose deadline already passed are pruned here (returned as the
+        second element for the caller to fail outside the lock), so an
+        expired request never consumes a batch slot. Caller must hold the
+        lock; the batch index is assigned here so dispatch order matches
+        take order even with concurrent submitters. Returns
+        ``((batch_index, take), shed)``; the batch is None when pruning
+        left nothing to dispatch."""
         group = self._pending.get(key, [])
+        now = self._clock()
+        shed = [
+            p for p in group if p.deadline is not None and p.deadline <= now
+        ]
+        if shed:
+            self._sheds += len(shed)
+            group = [
+                p for p in group
+                if p.deadline is None or p.deadline > now
+            ]
         take = group[: self._batch_size]
         rest = group[self._batch_size:]
         if rest:
@@ -707,9 +844,11 @@ class BatchingEngine:
             self._timer.cancel()
             self._timer = None
         self._arm_timer_locked()
+        if not take:
+            return None, shed
         batch_index = self._batches
         self._batches += 1
-        return batch_index, take
+        return (batch_index, take), shed
 
     def _run_batch(self, key: tuple, batch: tuple[int, list[_Pending]]) -> None:
         """Pad, search (outside the lock), record counters, demux."""
@@ -909,6 +1048,7 @@ class BatchingEngine:
                     float(np.percentile(ios_win, 99)) if len(ios_win) else 0.0
                 ),
                 early_exits=self._early_exits,
+                sheds=self._sheds,
             )
 
     def metrics_windows(self) -> dict:

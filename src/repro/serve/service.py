@@ -72,9 +72,11 @@ class CollectionHandle:
         """The underlying ``VectorIndex`` (e.g. for ``stats`` / ``save``)."""
         return self._service.index_of(self.name)
 
-    def submit(self, query, *, k=None, params=None, filter=None):
+    def submit(self, query, *, k=None, params=None, filter=None,
+               deadline_ms=None):
         return self._service.submit(
-            self.name, query, k=k, params=params, filter=filter
+            self.name, query, k=k, params=params, filter=filter,
+            deadline_ms=deadline_ms,
         )
 
     def search(self, queries, *, k=None, params=None, filter=None):
@@ -163,6 +165,7 @@ class VectorService:
         k: int | None = None,
         params: SearchParams | None = None,
         mesh=None,
+        priority: float = 1.0,
         **build_kwargs: Any,
     ) -> CollectionHandle:
         """Register a new collection under ``name``.
@@ -172,7 +175,8 @@ class VectorService:
         and the index is built here (``build_kwargs`` forwarded to
         ``PageANNIndex.build``). ``k``/``params`` set the collection's
         serving defaults; ``mesh`` routes its dispatches through
-        ``shard_search``.
+        ``shard_search``; ``priority`` weights this collection's dispatch
+        order on the shared core (see ``BatchingEngine.add_collection``).
         """
         persist.check_collection_name(name)
         if isinstance(index_or_cfg, PageANNConfig):
@@ -205,7 +209,7 @@ class VectorService:
         try:
             self._engine.add_collection(
                 name, index=index, default_k=k, default_params=params,
-                mesh=mesh,
+                mesh=mesh, priority=priority,
             )
         except Exception:
             with self._lock:
@@ -223,6 +227,7 @@ class VectorService:
         mesh=None,
         memory_budget=None,
         recall_target: float | None = None,
+        priority: float = 1.0,
     ) -> CollectionHandle:
         """Load a persisted index artifact (any manifest kind) from
         ``directory`` and register it as collection ``name``.
@@ -248,7 +253,7 @@ class VectorService:
                 )
             params = index.params_for_target(recall_target=recall_target)
         return self.create_collection(
-            name, index, k=k, params=params, mesh=mesh,
+            name, index, k=k, params=params, mesh=mesh, priority=priority,
         )
 
     def drop(self, name: str) -> None:
@@ -303,11 +308,14 @@ class VectorService:
         k: int | None = None,
         params: SearchParams | None = None,
         filter=None,
+        deadline_ms: float | None = None,
     ):
         """Enqueue one query for ``collection``; returns a
         Future[RequestResult]. Requests sharing a (collection, k-bin,
         params, filter) group share one fixed-shape dispatch on the common
-        core.
+        core. ``deadline_ms`` bounds queue time (see
+        ``BatchingEngine.submit``); a semantic-cache hit resolves
+        immediately and never expires.
 
         With a :class:`SemanticCache` installed, a query embedding within
         the cache's cosine threshold of an already-answered one (under the
@@ -320,7 +328,8 @@ class VectorService:
         cache = self._semantic_cache
         if cache is None:
             return self._engine.submit(query, k=k, params=params,
-                                       collection=collection, filter=filter)
+                                       collection=collection, filter=filter,
+                                       deadline_ms=deadline_ms)
         scope = (collection, k, params, filter)
         q = np.asarray(query, np.float32).reshape(-1)
         hit = cache.get(scope, q)
@@ -336,7 +345,8 @@ class VectorService:
         with self._lock:
             gen = self._write_gen.get(collection, 0)
         fut = self._engine.submit(query, k=k, params=params,
-                                  collection=collection, filter=filter)
+                                  collection=collection, filter=filter,
+                                  deadline_ms=deadline_ms)
 
         def _store(done, _q=q, _scope=scope, _gen=gen):
             if done.cancelled() or done.exception() is not None:

@@ -86,3 +86,83 @@ def test_sharded_search_on_multidevice_mesh():
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     assert rec["recall"] >= 0.8, rec
     assert rec["ios"] > 0
+
+
+_RAGGED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import MemoryMode, PageANNConfig, recall_at_k
+from repro.core import compat
+from repro.core import distributed as dist
+from repro.core.config import SearchParams
+from repro.core.search import PAD
+from repro.core.vamana import brute_force_knn
+from repro.data.pipeline import clustered_vectors, query_vectors
+
+# 130 vectors over 4 shards -> ragged 33/33/32/32 partition, every shard
+# padded to the largest shard's page count; k=64 exceeds the smallest
+# shard's pool so each shard MUST emit PAD tails into the merge.
+x = clustered_vectors(130, 16, num_clusters=8, seed=0)
+q = query_vectors(x, 8, seed=1)
+k = 64
+truth = brute_force_knn(x, q, 10)
+cfg = PageANNConfig(dim=16, graph_degree=8, build_beam=16, pq_subspaces=4,
+                    lsh_sample=64, lsh_entries=4, beam_width=64, max_hops=32,
+                    memory_mode=MemoryMode.HYBRID)
+sh = dist.build_sharded_index(x, cfg, num_shards=4)
+mesh = compat.make_mesh((4, 1), ("data", "model"))
+params = SearchParams(k=k, beam_width=64, io_batch=4, max_hops=32,
+                      lsh_entries=4)
+fn, _ = dist.make_sharded_search(mesh, cfg, sh.capacity, k=k, params=params)
+with mesh:
+    ids, tag, d, ios = fn(sh.data, jnp.asarray(q))
+ids = np.asarray(ids)
+d = np.asarray(d)
+old = dist.translate_ids(sh, ids, np.asarray(tag))
+
+pad = old == PAD
+# invariant 1: a merged PAD never carries a finite distance
+finite_pad = int((pad & np.isfinite(d)).sum())
+# invariant 2: no shard-local id survives the merge pointing at a pad slot
+surfaced = int(((ids >= 0) & pad).sum())
+# invariant 3: PAD only ever trails real candidates (never displaces one)
+interleaved = 0
+for row in old:
+    seen_pad = False
+    for v in row:
+        if v == PAD:
+            seen_pad = True
+        elif seen_pad:
+            interleaved += 1
+# invariant 4: every real id is a valid global id
+in_range = bool(((old >= 0) | pad).all() and (old < len(x)).all())
+print(json.dumps({
+    "recall": recall_at_k(old[:, :10], truth),
+    "finite_pad": finite_pad,
+    "surfaced_padslots": surfaced,
+    "interleaved": interleaved,
+    "in_range": in_range,
+}))
+"""
+
+
+def test_sharded_search_ragged_partitions_never_surface_pad():
+    """Non-divisible shard sizes pad every shard to the largest; pad slots
+    and pad pages must never rank in the merged top-k (satellite: pad-shard
+    handling in ``pad_pages``/``translate_ids``)."""
+    out = subprocess.run(
+        [sys.executable, "-c", _RAGGED_SCRIPT],
+        capture_output=True, text=True, timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo",
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["finite_pad"] == 0, rec
+    assert rec["surfaced_padslots"] == 0, rec
+    assert rec["interleaved"] == 0, rec
+    assert rec["in_range"], rec
+    assert rec["recall"] >= 0.9, rec

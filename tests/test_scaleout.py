@@ -1,0 +1,159 @@
+"""Scale-out contracts: ShardedPageStore recall parity with the
+unsharded index on every MemoryMode, per-shard bit-identical persist
+round-trips under one sharded manifest, global-id translation, and the
+per-shard search-parameter scaling rule."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexFormatError,
+    MemoryMode,
+    PageANNConfig,
+    PageANNIndex,
+    SearchParams,
+)
+from repro.core import persist
+from repro.core.vamana import brute_force_knn
+from repro.data.pipeline import clustered_vectors, query_vectors
+from repro.dist import ShardedPageStore, shard_params_for
+from repro.dist.sharded import SHARDS_NPZ
+
+N, D, K = 600, 32, 10
+
+
+def _cfg(**kw) -> PageANNConfig:
+    base = dict(
+        dim=D, graph_degree=12, build_beam=24, pq_subspaces=8,
+        lsh_sample=256, lsh_entries=8, beam_width=48, max_hops=48,
+        memory_mode=MemoryMode.HYBRID,
+    )
+    base.update(kw)
+    return PageANNConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return clustered_vectors(N, D, num_clusters=16, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    return query_vectors(corpus, 12, seed=3)
+
+
+@pytest.fixture(scope="module")
+def truth(corpus, queries):
+    return brute_force_knn(corpus, queries, K)
+
+
+def _recall(ids, truth):
+    hits = sum(
+        len(set(map(int, r)) & set(map(int, t)))
+        for r, t in zip(ids, truth)
+    )
+    return hits / truth.size
+
+
+@pytest.fixture(scope="module")
+def hybrid_store(corpus):
+    return ShardedPageStore.build(corpus, _cfg(), num_shards=2)
+
+
+# -------------------------------------------------------- recall parity
+@pytest.mark.parametrize("mode", list(MemoryMode))
+def test_recall_parity_with_unsharded_all_modes(corpus, queries, truth, mode):
+    cfg = _cfg(memory_mode=mode)
+    base = PageANNIndex.build(corpus, cfg)
+    store = ShardedPageStore.build(corpus, cfg, num_shards=2)
+    r_base = _recall(np.asarray(base.search(queries, k=K).ids), truth)
+    r_shard = _recall(np.asarray(store.search(queries, k=K).ids), truth)
+    assert r_shard >= r_base - 0.02, (mode, r_shard, r_base)
+
+
+def test_recall_parity_four_shards(corpus, queries, truth):
+    cfg = _cfg()
+    base = PageANNIndex.build(corpus, cfg)
+    store = ShardedPageStore.build(corpus, cfg, num_shards=4)
+    r_base = _recall(np.asarray(base.search(queries, k=K).ids), truth)
+    r_shard = _recall(np.asarray(store.search(queries, k=K).ids), truth)
+    assert r_shard >= r_base - 0.02, (r_shard, r_base)
+
+
+# ------------------------------------------------------ global-id space
+def test_search_returns_global_ids(corpus, hybrid_store):
+    # corpus rows as queries: the nearest neighbor of x[i] is i itself,
+    # which only holds if per-shard local ids were translated correctly
+    res = hybrid_store.search(corpus[:16], k=K)
+    ids = np.asarray(res.ids)
+    valid = ids[ids >= 0]
+    assert valid.size and valid.max() < N
+    assert (ids[:, 0] == np.arange(16)).mean() >= 0.9
+    # no duplicate global ids within a row
+    for row in ids:
+        row = row[row >= 0]
+        assert len(set(row.tolist())) == len(row)
+
+
+def test_partitions_cover_corpus_disjointly(hybrid_store):
+    parts = [np.asarray(p) for p in hybrid_store.parts]
+    cat = np.concatenate(parts)
+    assert len(cat) == N
+    assert np.array_equal(np.sort(cat), np.arange(N))
+
+
+# ------------------------------------------------------------ persistence
+def test_persist_round_trip_bit_identical(tmp_path, hybrid_store, queries):
+    d = str(tmp_path / "db")
+    hybrid_store.save(d)
+    # layout: one sharded manifest over per-shard sub-artifacts
+    assert os.path.isfile(os.path.join(d, SHARDS_NPZ))
+    for i in range(2):
+        sub = os.path.join(d, f"shard-{i}")
+        assert os.path.isdir(sub), sub
+    man = persist.read_manifest(d)
+    assert man["kind"] == "sharded" and man["num_shards"] == 2
+
+    loaded = persist.load_index(d)
+    assert isinstance(loaded, ShardedPageStore)
+    assert loaded.num_shards == 2
+    for p_a, p_b in zip(hybrid_store.parts, loaded.parts):
+        assert np.array_equal(np.asarray(p_a), np.asarray(p_b))
+    # per-shard searches are bit-identical, not merely recall-equal
+    for sub_a, sub_b in zip(hybrid_store.shards, loaded.shards):
+        ra = sub_a.search(queries, k=K)
+        rb = sub_b.search(queries, k=K)
+        assert np.array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+        assert np.array_equal(np.asarray(ra.dists), np.asarray(rb.dists))
+    # and so is the merged result
+    ra = hybrid_store.search(queries, k=K)
+    rb = loaded.search(queries, k=K)
+    assert np.array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    assert np.array_equal(np.asarray(ra.dists), np.asarray(rb.dists))
+
+
+def test_load_rejects_non_sharded_artifact(tmp_path, corpus):
+    idx = PageANNIndex.build(corpus[:200], _cfg())
+    d = str(tmp_path / "plain")
+    idx.save(d)
+    with pytest.raises(IndexFormatError):
+        ShardedPageStore.load(d)
+
+
+# ------------------------------------------------- per-shard search rule
+def test_shard_params_scaling_rule():
+    base = SearchParams(k=K, beam_width=64, max_hops=64, io_batch=8,
+                        lsh_entries=12)
+    for s in (2, 4, 8):
+        p = shard_params_for(base, s)
+        assert p.k == base.k
+        # beam shrinks with shard count but never below what top-k
+        # merging and entry seeding need
+        assert p.beam_width >= max(base.k, base.lsh_entries)
+        assert p.beam_width <= base.beam_width
+        assert p.io_batch <= 3
+        assert p.max_hops >= 16
+    # more shards never means more per-shard work
+    assert (shard_params_for(base, 4).beam_width
+            <= shard_params_for(base, 2).beam_width)

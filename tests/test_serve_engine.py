@@ -1,6 +1,8 @@
 """Serving engine + refactored search-loop contracts: batching/demux order,
 ragged-batch padding, shard_search parity, ops-dispatch routing, and the
 _mask_dups_keep_first dedup invariant."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -458,3 +460,105 @@ if HAVE_HYPOTHESIS:
         ids = np.asarray(ids, np.int32)
         d = np.random.default_rng(seed).uniform(0, 10, len(ids)).astype(np.float32)
         _check_keep_first(ids, d)
+
+
+# ------------------------------------------------- deadlines + QoS (PR 10)
+def test_deadline_expiry_sheds_with_timeout_error():
+    eng = BatchingEngine(_toy_search_fn([]), dim=4, batch_size=8,
+                         timeout_ms=None)
+    futs = [
+        eng.submit(np.zeros(4, np.float32), deadline_ms=0.01)
+        for _ in range(2)
+    ]
+    time.sleep(0.05)
+    eng.flush()
+    for f in futs:
+        with pytest.raises(TimeoutError, match="deadline"):
+            f.result(timeout=5)
+    m = eng.metrics()
+    assert m.sheds == 2
+    assert m.requests == 0  # shed rows never count as served
+    eng.close()
+
+
+def test_generous_deadline_completes_normally():
+    eng = BatchingEngine(_toy_search_fn([]), dim=4, batch_size=2)
+    futs = [
+        eng.submit(np.zeros(4, np.float32), deadline_ms=60_000.0)
+        for _ in range(2)
+    ]
+    for f in futs:
+        assert f.result(timeout=10).batch_size == 2
+    assert eng.metrics().sheds == 0
+    eng.close()
+
+
+def test_deadline_fires_via_timer_without_flush():
+    # no engine timeout and no explicit flush: the deadline itself must
+    # arm the timer, or the future would hang forever
+    eng = BatchingEngine(_toy_search_fn([]), dim=4, batch_size=64,
+                         timeout_ms=None)
+    fut = eng.submit(np.zeros(4, np.float32), deadline_ms=20.0)
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=10)
+    assert eng.metrics().sheds == 1
+    eng.close()
+
+
+def test_expired_and_live_coexist_in_one_group():
+    eng = BatchingEngine(_toy_search_fn([]), dim=4, batch_size=4,
+                         timeout_ms=None)
+    doomed = eng.submit(np.zeros(4, np.float32), deadline_ms=5.0)
+    time.sleep(0.03)
+    live = eng.submit(np.ones(4, np.float32) * 3)
+    eng.flush()
+    with pytest.raises(TimeoutError):
+        doomed.result(timeout=5)
+    r = live.result(timeout=5)
+    assert r.batch_size == 1  # the expired row was pruned before dispatch
+    assert int(np.asarray(r.result.ids)[0]) == 3
+    m = eng.metrics()
+    assert m.sheds == 1 and m.requests == 1
+    eng.close()
+
+
+def test_deadline_validation():
+    eng = BatchingEngine(_toy_search_fn([]), dim=4, batch_size=2)
+    for bad in (0.0, -1.0):
+        with pytest.raises(ValueError, match="deadline_ms"):
+            eng.submit(np.zeros(4, np.float32), deadline_ms=bad)
+    eng.close()
+
+
+def test_priority_weighted_dispatch_order():
+    order = []
+
+    def tagged(tag):
+        base = _toy_search_fn([])
+
+        def fn(q, k, params):
+            order.append(tag)
+            return base(q, k, params)
+
+        return fn
+
+    eng = BatchingEngine(tagged("default"), dim=4, batch_size=64,
+                         timeout_ms=None)
+    eng.add_collection("hi", tagged("hi"), dim=4, priority=50.0)
+    eng.add_collection("lo", tagged("lo"), dim=4, priority=0.5)
+    # lo is OLDER, but hi's weight dominates the weighted-aging rank
+    lo = eng.submit(np.zeros(4, np.float32), collection="lo")
+    time.sleep(0.01)
+    hi = eng.submit(np.zeros(4, np.float32), collection="hi")
+    eng.flush()  # one group per flush: picks the highest rank first
+    eng.flush()
+    hi.result(timeout=5), lo.result(timeout=5)
+    assert order == ["hi", "lo"]
+    eng.close()
+
+
+def test_priority_validation():
+    eng = BatchingEngine(_toy_search_fn([]), dim=4, batch_size=2)
+    with pytest.raises(ValueError, match="priority"):
+        eng.add_collection("bad", _toy_search_fn([]), dim=4, priority=0.0)
+    eng.close()
